@@ -1,0 +1,70 @@
+"""Shared benchmark plumbing: evaluation loops + CSV emit."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+from repro.core.metrics import SimResult, et_table
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import MIGSimulator, StaticPolicy
+from repro.core.workload import WorkloadSpec, generate_jobs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def eval_algo(
+    scheduler: str,
+    spec: WorkloadSpec,
+    config_id: int,
+    seeds: Iterable[int],
+    policy_factory=None,
+    mig_enabled: bool = True,
+) -> List[SimResult]:
+    sim = MIGSimulator(make_scheduler(scheduler), mig_enabled=mig_enabled)
+    out = []
+    for s in seeds:
+        jobs = generate_jobs(spec, seed=s)
+        policy = policy_factory() if policy_factory else StaticPolicy(config_id)
+        out.append(sim.run(jobs, policy=policy))
+    return out
+
+
+def emit(name: str, rows: Sequence[Dict], keys: Optional[Sequence[str]] = None) -> str:
+    """Print CSV to stdout + save under artifacts/bench/<name>.csv."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return ""
+    keys = list(keys or rows[0].keys())
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(_fmt(r.get(k)) for k in keys))
+    csv = "\n".join(lines)
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(csv + "\n")
+    print(f"### {name}")
+    print(csv)
+    print()
+    return path
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def summarize(results: List[SimResult]) -> Dict[str, float]:
+    n = max(len(results), 1)
+    return {
+        "energy_wh": sum(r.energy_wh for r in results) / n,
+        "avg_tardiness": sum(r.avg_tardiness for r in results) / n,
+        "preemptions": sum(r.preemptions for r in results) / n,
+        "repartitions": sum(r.repartitions for r in results) / n,
+        "deadline_misses": sum(r.deadline_misses for r in results) / n,
+    }

@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks (interpret-mode correctness timing is meaningless
+on CPU, so we time the pure-jnp oracles as the substrate's CPU path and
+report the kernels' VMEM working sets per BlockSpec — the quantity that
+matters for the TPU roofline)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def kernel_bench(scale: float = 1.0) -> List[Dict]:
+    rng = np.random.default_rng(0)
+
+    def t(*s, dtype=jnp.float32):
+        return jnp.asarray(rng.normal(size=s), dtype)
+
+    rows: List[Dict] = []
+
+    # attention: (B,S,H,D) oracle vs VMEM tile budget of the Pallas kernel
+    B, S, H, D, bq, bk = 1, 1024, 4, 128, 128, 128
+    q, k, v = t(B, S, H, D), t(B, S, H, D), t(B, S, H, D)
+    us = _time(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True)), q, k, v)
+    vmem = (bq * D * 2 + 2 * bk * D * 2 + bq * D * 4 + 2 * bq * 4) / 1024
+    rows.append(
+        {"kernel": "flash_attention", "shape": f"B{B}xS{S}xH{H}xD{D}",
+         "cpu_ref_us": us, "vmem_tile_kib": vmem,
+         "flops": 4.0 * B * H * S * S * D / 2}
+    )
+
+    # mamba scan
+    B, T, Di, N = 1, 1024, 512, 16
+    x = t(B, T, Di)
+    dt = jax.nn.softplus(t(B, T, Di)) * 0.1
+    A = -jnp.exp(t(Di, N) * 0.5)
+    Bm, Cm, Dv = t(B, T, N), t(B, T, N), t(Di)
+    us = _time(jax.jit(ref.mamba_scan_ref), x, dt, A, Bm, Cm, Dv)
+    vmem = (128 * 512 * 2 * 3 + 2 * 128 * N * 4 + 512 * N * 4) / 1024
+    rows.append(
+        {"kernel": "mamba_scan", "shape": f"B{B}xT{T}xDi{Di}xN{N}",
+         "cpu_ref_us": us, "vmem_tile_kib": vmem,
+         "flops": 6.0 * B * T * Di * N}
+    )
+
+    # mlstm chunked
+    B, T, H, D = 1, 512, 4, 64
+    q, k, v = t(B, T, H, D), t(B, T, H, D), t(B, T, H, D)
+    ig, fg = t(B, T, H), t(B, T, H) + 2.0
+    us = _time(jax.jit(lambda *a: ref.mlstm_chunked_scan(*a, chunk=128)), q, k, v, ig, fg)
+    vmem = (3 * 128 * D * 2 + D * D * 4 + 128 * 128 * 4) / 1024
+    rows.append(
+        {"kernel": "mlstm_chunkwise", "shape": f"B{B}xT{T}xH{H}xD{D}",
+         "cpu_ref_us": us, "vmem_tile_kib": vmem,
+         "flops": 2.0 * B * H * T * 128 * D * 2}
+    )
+
+    # gmm
+    G, rows_pg, K, N = 8, 256, 512, 512
+    lhs, rhs = t(G * rows_pg, K), t(G, K, N)
+    sizes = jnp.full((G,), rows_pg, jnp.int32)
+    us = _time(jax.jit(ref.gmm_ref), lhs, rhs, sizes)
+    vmem = (128 * 512 * 2 + 512 * 128 * 2 + 128 * 128 * 4) / 1024
+    rows.append(
+        {"kernel": "gmm", "shape": f"G{G}xM{G*rows_pg}xK{K}xN{N}",
+         "cpu_ref_us": us, "vmem_tile_kib": vmem,
+         "flops": 2.0 * G * rows_pg * K * N}
+    )
+    emit("kernels_bench", rows)
+    return rows

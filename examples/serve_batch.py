@@ -1,0 +1,58 @@
+"""Batched serving: prefill a prompt batch, then decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_batch.py [--tokens 32]
+
+Uses the mixtral-family smoke config (MoE + sliding-window ring-buffer
+caches) — the serving path the ``decode_*`` dry-run shapes lower at scale.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import decode_step, forward, init_cache, init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="mixtral_8x7b")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    B, prompt_len = args.batch, 16
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, prompt_len)), jnp.int32)
+
+    # prefill: feed the prompt through decode steps to build the cache
+    cache = init_cache(cfg, B, prompt_len + args.tokens)
+    step = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i, impl="ref"))
+    tok = prompt[:, :1]
+    t0 = time.time()
+    for i in range(prompt_len):
+        logits, cache = step(params, cache, prompt[:, i : i + 1], jnp.asarray(i, jnp.int32))
+    # greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(prompt_len, prompt_len + args.tokens):
+        out_tokens.append(np.asarray(tok[:, 0]))
+        logits, cache = step(params, cache, tok, jnp.asarray(i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({B * args.tokens / dt:.1f} tok/s on CPU smoke config)")
+    print("sample row:", gen[0][:16])
+    assert gen.shape == (B, args.tokens)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end training driver: a ~25M-param gemma3-family model for a few
+hundred steps on CPU, with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+
+Exercises the full substrate: synthetic pipeline -> pjit'd train step (layer
+scan + remat) -> AdamW + cosine schedule -> async checkpoints. The loss curve
+must drop (asserted).
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="gemma3_1b")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        _, losses = train(
+            args.arch,
+            steps=args.steps,
+            smoke=True,
+            global_batch=8,
+            seq_len=256,
+            lr=1e-3,
+            ckpt_dir=ckpt,
+            ckpt_every=100,
+            log_every=20,
+        )
+    n = max(len(losses) // 10, 1)
+    first, last = float(np.mean(losses[:n])), float(np.mean(losses[-n:]))
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first - 0.5, "training did not reduce the loss"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py
+Prints markdown to stdout (pasted/refreshed into EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.roofline import load_record, model_flops, roofline_row  # noqa: E402
+from repro.launch.shapes import SHAPES, all_cells  # noqa: E402
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    return f"{x/2**30:.2f}"
+
+
+def main() -> None:
+    print("### §Dry-run — compile status and per-device memory\n")
+    print("| arch | shape | pod 16x16 | multi-pod 2x16x16 | args GiB/dev | temp GiB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in all_cells():
+        pod = load_record(arch, shape.name, False)
+        mp = load_record(arch, shape.name, True)
+
+        def status(r):
+            if r is None:
+                return "…"
+            if r.get("skipped"):
+                return "skip"
+            return "OK" if r.get("ok") else "FAIL"
+
+        s_pod, s_mp = status(pod), status(mp)
+        if s_pod == "OK":
+            n_ok += 1
+        elif s_pod == "skip":
+            n_skip += 1
+        elif s_pod == "FAIL":
+            n_fail += 1
+        args = temp = comp = None
+        if pod and pod.get("ok") and not pod.get("skipped"):
+            args = pod.get("argument_size_in_bytes")
+            temp = pod.get("temp_size_in_bytes")
+            comp = pod.get("compile_seconds")
+        print(
+            f"| {arch} | {shape.name} | {s_pod} | {s_mp} | {fmt_b(args)} | "
+            f"{fmt_b(temp)} | {f'{comp:.0f}' if comp else '-'} |"
+        )
+    print(f"\npod cells: {n_ok} OK, {n_skip} skipped (DESIGN.md §4), {n_fail} failed.\n")
+
+    print("### §Roofline — per (arch x shape), single pod (256 chips)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | dominant | MODEL/HLO | roofline frac | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape in all_cells():
+        row = roofline_row(arch, shape.name)
+        if row is None:
+            print(f"| {arch} | {shape.name} | … | | | | | | pending |")
+            continue
+        if row.get("skipped"):
+            print(f"| {arch} | {shape.name} | skip | | | | | | {row.get('reason','')} |")
+            continue
+        if row.get("failed"):
+            print(f"| {arch} | {shape.name} | FAIL | | | | | | |")
+            continue
+        note = _note(row)
+        print(
+            f"| {arch} | {shape.name} | {fmt_s(row['t_compute_s'])} | "
+            f"{fmt_s(row['t_memory_s'])} | {fmt_s(row['t_collective_s'])} | "
+            f"{row['dominant']} | {row['useful_ratio']:.2f} | "
+            f"{row['roofline_fraction']:.2%} | {note} |"
+        )
+
+
+def _note(row) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if (row["useful_ratio"] or 1) < 0.6:
+            return "cut non-useful FLOPs (remat/attention waste)"
+        return "near compute roof; fuse/overlap collectives"
+    if d == "memory":
+        return "raise arithmetic intensity (bigger tiles, bf16 temps, fuse)"
+    return "reshard to shrink collective payload / overlap with compute"
+
+
+if __name__ == "__main__":
+    main()

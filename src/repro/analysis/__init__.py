@@ -1,0 +1,15 @@
+"""Roofline analysis: hardware constants + term derivation from dry-run
+artifacts (EXPERIMENTS.md §Roofline)."""
+
+from repro.analysis.constants import CHIP_FLOPS_BF16, HBM_BW, LINK_BW, HBM_BYTES
+from repro.analysis.roofline import roofline_terms, model_flops, roofline_row
+
+__all__ = [
+    "CHIP_FLOPS_BF16",
+    "HBM_BW",
+    "LINK_BW",
+    "HBM_BYTES",
+    "roofline_terms",
+    "model_flops",
+    "roofline_row",
+]

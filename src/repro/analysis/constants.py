@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (assignment brief)."""
+
+CHIP_FLOPS_BF16 = 197e12  # 197 TFLOP/s bf16 per chip
+HBM_BW = 819e9  # 819 GB/s HBM bandwidth per chip
+LINK_BW = 50e9  # ~50 GB/s per ICI link
+HBM_BYTES = 16 * 1024**3  # 16 GiB HBM per chip

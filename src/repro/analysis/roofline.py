@@ -1,0 +1,118 @@
+"""Roofline-term derivation from the dry-run artifacts.
+
+Per (arch x shape x mesh) cell (EXPERIMENTS.md §Roofline):
+
+  compute term    = HLO_FLOPs    / (chips x 197 TFLOP/s)
+  memory term     = HLO_bytes    / (chips x 819 GB/s)
+  collective term = coll_bytes   / (chips x 50 GB/s/link)
+
+FLOPs/bytes come from the scan-corrected *composite* cost (dryrun.py lowers
+1- and 2-unit unscanned mini-models; ``total = outer + unit x repeats``)
+because XLA's cost analysis counts ``lax.scan`` bodies once.  Collective
+bytes are parsed from the compiled per-device HLO and multiplied by the
+device count (the brief's "sum operand sizes" over the whole machine).
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for
+inference shapes.  The MODEL/HLO ratio flags remat or redundant compute.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.analysis.constants import CHIP_FLOPS_BF16, HBM_BW, LINK_BW
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+
+__all__ = ["roofline_terms", "model_flops", "roofline_row", "load_record"]
+
+ART_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+)
+
+
+def load_record(arch: str, shape: str, multi_pod: bool = False) -> Optional[Dict]:
+    key = f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}"
+    path = os.path.join(ART_DIR, key + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic useful FLOPs for the whole cell (6ND train / 2ND inference)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.global_batch  # decode: one token per request
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict[str, float]]:
+    """Three terms in seconds + diagnostics, from one dry-run record."""
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    chips = rec.get("devices", 256)
+    comp = (rec.get("cost") or {}).get("composite")
+    if comp is None:
+        flops_total = (rec.get("flops") or 0.0) * chips
+        bytes_total = (rec.get("bytes_accessed") or 0.0) * chips
+        coll_total = sum((rec.get("collectives") or {}).values()) * chips
+        scan_corrected = False
+    else:
+        flops_total = comp["flops"] * chips
+        bytes_total = comp["bytes_accessed"] * chips
+        coll_total = sum(comp["collectives"].values()) * chips
+        scan_corrected = True
+    t_compute = flops_total / (chips * CHIP_FLOPS_BF16)
+    t_memory = bytes_total / (chips * HBM_BW)
+    t_coll = coll_total / (chips * LINK_BW)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_total": flops_total,
+        "hlo_bytes_total": bytes_total,
+        "collective_bytes_total": coll_total,
+        "scan_corrected": scan_corrected,
+        "chips": chips,
+    }
+
+
+def roofline_row(arch: str, shape: str, multi_pod: bool = False) -> Optional[Dict]:
+    rec = load_record(arch, shape, multi_pod)
+    if rec is None:
+        return None
+    if rec.get("skipped"):
+        return {"arch": arch, "shape": shape, "skipped": True, "reason": rec.get("reason", "")}
+    terms = roofline_terms(rec)
+    if terms is None:
+        return {"arch": arch, "shape": shape, "failed": True, "error": rec.get("error")}
+    mf = model_flops(arch, shape)
+    t_bound = max(terms["t_compute_s"], terms["t_memory_s"], terms["t_collective_s"])
+    t_ideal = mf / (terms["chips"] * CHIP_FLOPS_BF16)
+    row = {
+        "arch": arch,
+        "shape": shape,
+        **terms,
+        "model_flops": mf,
+        "useful_ratio": mf / terms["hlo_flops_total"] if terms["hlo_flops_total"] else None,
+        # roofline fraction: ideal compute time / achievable-bound time
+        "roofline_fraction": t_ideal / t_bound if t_bound > 0 else None,
+        "temp_bytes_per_device": rec.get("temp_size_in_bytes"),
+        "argument_bytes_per_device": rec.get("argument_size_in_bytes"),
+    }
+    return row

@@ -1,0 +1,34 @@
+"""gemma3-12b [dense]: 48L d=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+
+[hf:google/gemma-3-1b-pt family; unverified] — 5:1 local:global attention,
+sliding window 1024, qk-norm, tied embeddings, 128k context.  Runs
+``long_500k`` (local layers dominate; global layers are linear-cost at
+decode) — DESIGN.md §4.
+"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    activation="geglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    sliding_window=1024,
+    local_global_ratio=(5, 1),
+    max_seq_len=524_288,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=6, d_model=64, n_heads=2, n_kv_heads=1, head_dim=32,
+    d_ff=256, vocab_size=256, sliding_window=64, max_seq_len=512,
+)

@@ -1,0 +1,33 @@
+"""gemma3-1b [dense]: 26L d=1152 4H (GQA kv=1) d_ff=6912 vocab=262144.
+
+[hf:google/gemma-3-1b-pt; unverified] — 5:1 local:global, window 512,
+qk-norm, tied embeddings.  Runs ``long_500k`` (DESIGN.md §4).
+26 layers: 4 full (5L+1G) units + a 2-layer tail handled unscanned.
+"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    activation="geglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    sliding_window=512,
+    local_global_ratio=(5, 1),
+    max_seq_len=524_288,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=13, d_model=64, n_heads=2, n_kv_heads=1, head_dim=32,
+    d_ff=256, vocab_size=256, sliding_window=64, max_seq_len=512,
+)

@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m [moe]: 32L d=1536 24H (GQA kv=8) d_ff_expert=512
+vocab=49155, MoE 40 experts top-8, every layer.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family; hf] — SwiGLU experts.
+Pure full attention: ``long_500k`` skipped (DESIGN.md §4).
+"""
+import dataclasses
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=0,  # every MLP is MoE
+    vocab_size=49155,
+    activation="swiglu",
+    norm="rmsnorm",
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512, every_k_layers=1),
+    tie_embeddings=True,
+    max_seq_len=32_768,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, vocab_size=256,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64, every_k_layers=1),
+    max_seq_len=512,
+)

@@ -1,0 +1,27 @@
+"""nemotron-4-340b [dense]: 96L d=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+
+[arXiv:2402.16819; unverified] — squared-ReLU MLP, GQA.  Pure full attention:
+``long_500k`` skipped (DESIGN.md §4).
+"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="sq_relu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    max_seq_len=32_768,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=128, n_heads=8, n_kv_heads=2, d_ff=512,
+    vocab_size=256, max_seq_len=512,
+)

@@ -1,0 +1,30 @@
+"""phi-3-vision-4.2b [vlm]: 32L d=3072 32H (MHA kv=32) d_ff=8192 vocab=32064,
+phi3-mini backbone + CLIP frontend (STUB: precomputed patch embeddings).
+
+[hf:microsoft/Phi-3-vision-128k-instruct; hf] — the modality frontend is a
+stub per the brief: ``input_specs`` provides (B, 576, 3072) patch embeddings
+prepended to the text sequence.  Pure full attention: ``long_500k`` skipped.
+"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    activation="swiglu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+    vision_tokens=576,
+    max_seq_len=131_072,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256, vision_tokens=16, max_seq_len=512,
+)

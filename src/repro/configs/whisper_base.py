@@ -1,0 +1,30 @@
+"""whisper-base [audio]: enc-dec, 6L each, d=512 8H d_ff=2048 vocab=51865.
+
+[arXiv:2212.04356; unverified] — conv frontend is a STUB: ``input_specs``
+provides precomputed (B, 1500, 512) frame embeddings.  Enc-dec: decode shapes
+use decoder self-attn KV + cross-attention; no 500k decode by construction
+(DESIGN.md §4).
+"""
+import dataclasses
+from repro.models.config import ArchConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    activation="gelu",
+    norm="layernorm",
+    encoder=EncoderConfig(n_layers=6, n_frames=1500),
+    max_seq_len=32_768,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+    vocab_size=256, encoder=EncoderConfig(n_layers=2, n_frames=32),
+    max_seq_len=512,
+)

@@ -1,0 +1,27 @@
+"""xlstm-350m [ssm]: 24L d=1024 4H, sLSTM + mLSTM blocks (xLSTM[7:1]).
+
+[arXiv:2405.04517; unverified] — d_ff=0 (blocks are self-contained),
+vocab 50304.  ``long_500k``-capable (O(1) recurrent state).
+"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern="xlstm",
+    xlstm_slstm_every=8,  # xLSTM[7:1]
+    norm="rmsnorm",
+    tie_embeddings=False,
+    max_seq_len=524_288,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=8, d_model=64, n_heads=2, vocab_size=256, max_seq_len=512
+)

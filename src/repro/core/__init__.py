@@ -1,0 +1,69 @@
+"""The paper's primary contribution: energy-efficient MIG scheduling with
+dynamic repartitioning (Lipe et al., CCGrid 2025), reproduced in JAX.
+
+Layers:
+* :mod:`repro.core.slices`     — Fig. 1 slice/partition model (12 configs)
+* :mod:`repro.core.power`      — Fig. 3 saturating power curves
+* :mod:`repro.core.jobs`       — jobs with linear/capped/sublinear elasticity
+* :mod:`repro.core.workload`   — §V-A diurnal Poisson workload generator
+* :mod:`repro.core.metrics`    — §IV-A ET multi-objective metric
+* :mod:`repro.core.schedulers` — §IV-C EDF-FS / EDF-SS / LLF / LALF
+* :mod:`repro.core.simulator`  — event-driven preemptive simulator
+* :mod:`repro.core.rl`         — §IV-D DQN dynamic repartitioning (pure JAX)
+"""
+
+from repro.core.slices import MIG_CONFIGS, NUM_CONFIGS, Partition, SliceType, config
+from repro.core.power import A100_250W, TPU_V5E_POD, PowerModel
+from repro.core.jobs import Elasticity, ElasticityClass, Job, JobKind
+from repro.core.workload import WorkloadSpec, generate_jobs, arrival_rate
+from repro.core.metrics import SimResult, et_metric, et_scale_factor, et_table
+from repro.core.schedulers import (
+    SCHEDULERS,
+    EDFFastestSlice,
+    EDFSlowestSlice,
+    LeastAverageLaxityFirst,
+    LeastLaxityFirst,
+    Scheduler,
+    make_scheduler,
+)
+from repro.core.simulator import (
+    DayNightPolicy,
+    MIGSimulator,
+    NoMIGPolicy,
+    StaticPolicy,
+    REPARTITION_PENALTY_MIN,
+)
+
+__all__ = [
+    "MIG_CONFIGS",
+    "NUM_CONFIGS",
+    "Partition",
+    "SliceType",
+    "config",
+    "A100_250W",
+    "TPU_V5E_POD",
+    "PowerModel",
+    "Elasticity",
+    "ElasticityClass",
+    "Job",
+    "JobKind",
+    "WorkloadSpec",
+    "generate_jobs",
+    "arrival_rate",
+    "SimResult",
+    "et_metric",
+    "et_scale_factor",
+    "et_table",
+    "SCHEDULERS",
+    "EDFFastestSlice",
+    "EDFSlowestSlice",
+    "LeastAverageLaxityFirst",
+    "LeastLaxityFirst",
+    "Scheduler",
+    "make_scheduler",
+    "DayNightPolicy",
+    "MIGSimulator",
+    "NoMIGPolicy",
+    "StaticPolicy",
+    "REPARTITION_PENALTY_MIN",
+]

@@ -1,0 +1,72 @@
+"""The ET multi-objective metric (paper §IV-A).
+
+For ``n`` simulations with energy ``x_i`` (Wh here; any consistent unit) and
+average tardiness ``y_i`` (minutes):
+
+    ET = (1/n) * sum_i (a*x_i + y_i) / (a + 1)
+
+The scaling factor ``a`` is fixed *across an experiment*: with ``s`` the
+global mean energy and ``t`` the global mean average-tardiness over the
+simulations of all algorithms in the experiment, ``a = t / (2 s)`` — i.e.
+after normalization tardiness is penalized 2x relative to energy.
+Lower ET is better.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
+
+__all__ = ["SimResult", "et_scale_factor", "et_metric", "et_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Outcome of one simulation run."""
+
+    energy_wh: float
+    avg_tardiness: float
+    num_jobs: int = 0
+    total_tardiness: float = 0.0
+    preemptions: int = 0
+    repartitions: int = 0
+    max_tardiness: float = 0.0
+    deadline_misses: int = 0
+    busy_slot_minutes: float = 0.0  # integral of busy slots over time
+    extra: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+
+def et_scale_factor(results: Iterable[SimResult]) -> float:
+    """``a = t / (2 s)`` over ALL provided simulations (all algorithms)."""
+    results = list(results)
+    if not results:
+        raise ValueError("no results")
+    s = sum(r.energy_wh for r in results) / len(results)
+    t = sum(r.avg_tardiness for r in results) / len(results)
+    if s <= 0.0:
+        return 1.0
+    return t / (2.0 * s)
+
+
+def et_metric(results: Sequence[SimResult], a: float) -> float:
+    """ET for one algorithm's simulations given the experiment-wide ``a``."""
+    if not results:
+        raise ValueError("no results")
+    return sum((a * r.energy_wh + r.avg_tardiness) / (a + 1.0) for r in results) / len(
+        results
+    )
+
+
+def et_table(
+    per_algo_results: Mapping[str, Sequence[SimResult]],
+) -> Tuple[Dict[str, float], float]:
+    """ET per algorithm with a shared ``a`` (as in Tables II/III).
+
+    Returns (``{algo: ET}``, ``a``).
+    """
+    all_results: List[SimResult] = []
+    for rs in per_algo_results.values():
+        all_results.extend(rs)
+    a = et_scale_factor(all_results)
+    table = {name: et_metric(rs, a) for name, rs in per_algo_results.items()}
+    return table, a

@@ -1,0 +1,113 @@
+"""Power models.
+
+The paper measures (Fig. 3, A100 at the default 250 W cap) that
+
+* idle power is substantial (~65 W),
+* marginal power of the first few busy slots is steep,
+* after ~4 of 7 slots are busy additional slots cost almost nothing,
+* the difference between many small busy slices and one equal-sized large busy
+  slice is <10 % (usually <5 %) and is ignored for modelling.
+
+So power is a *concave, saturating* function of busy compute slots — NOT the
+"speed^alpha" power law common in the literature (paper §IV intro).  We encode
+Fig. 3 as a lookup on busy slots 0..7 with linear interpolation (fractional
+busy slots arise only in the TPU-cluster adaptation).
+
+Energy below is reported in watt-hours; the simulator's time unit is minutes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+__all__ = ["PowerModel", "A100_250W", "TPU_V5E_POD", "make_saturating_power"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """Piecewise-linear power (watts) vs number of busy compute slots."""
+
+    name: str
+    watts_by_busy_slots: Tuple[float, ...]  # index 0 == idle
+    total_slots: int
+
+    def __post_init__(self) -> None:
+        if len(self.watts_by_busy_slots) != self.total_slots + 1:
+            raise ValueError("need total_slots+1 power entries (incl. idle)")
+        w = self.watts_by_busy_slots
+        if any(b > a + 1e-9 for a, b in zip(w[1:], w)):
+            raise ValueError("power must be nondecreasing in busy slots")
+
+    def power_watts(self, busy_slots: float) -> float:
+        """Power draw with ``busy_slots`` compute slots busy (interpolated)."""
+        u = min(max(busy_slots, 0.0), float(self.total_slots))
+        lo = int(u)
+        hi = min(lo + 1, self.total_slots)
+        frac = u - lo
+        w = self.watts_by_busy_slots
+        return w[lo] * (1.0 - frac) + w[hi] * frac
+
+    def energy_wh(self, busy_slots: float, minutes: float) -> float:
+        """Energy in watt-hours for an interval at constant utilization."""
+        return self.power_watts(busy_slots) * minutes / 60.0
+
+    @property
+    def idle_watts(self) -> float:
+        return self.watts_by_busy_slots[0]
+
+    @property
+    def peak_watts(self) -> float:
+        return self.watts_by_busy_slots[-1]
+
+
+# Fig. 3 (A100-40GB, 250 W cap): steep marginal power up to 4 busy slots, then
+# nearly flat.  Exact tabular values are not published; these reproduce the
+# described shape (see DESIGN.md §2 "assumption changes").
+A100_250W = PowerModel(
+    name="a100-40gb-250w",
+    watts_by_busy_slots=(65.0, 135.0, 185.0, 222.0, 243.0, 248.0, 250.0, 250.0),
+    total_slots=7,
+)
+
+
+def make_saturating_power(
+    name: str,
+    idle_watts: float,
+    peak_watts: float,
+    total_slots: int,
+    knee_fraction: float = 4.0 / 7.0,
+    sharpness: float = 2.2,
+) -> PowerModel:
+    """Build a Fig.-3-shaped saturating power curve for other hardware.
+
+    ``P(u) = idle + (peak-idle) * (1 - exp(-s*u/k)) / (1 - exp(-s/k))`` with
+    ``k = knee_fraction`` — rises steeply until the knee then flattens.
+    """
+    import math
+
+    k = knee_fraction
+    s = sharpness
+    denom = 1.0 - math.exp(-s / k)
+    watts = []
+    for i in range(total_slots + 1):
+        u = i / total_slots
+        frac = (1.0 - math.exp(-s * u / k)) / denom
+        watts.append(idle_watts + (peak_watts - idle_watts) * frac)
+    # enforce monotone (numerical safety) and exact endpoints
+    for i in range(1, len(watts)):
+        watts[i] = max(watts[i], watts[i - 1])
+    watts[-1] = max(watts[-1], peak_watts)
+    return PowerModel(name=name, watts_by_busy_slots=tuple(watts), total_slots=total_slots)
+
+
+# TPU v5e pod adaptation: 256 chips grouped into 7 "slots" of ~36 chips.
+# Idle ~100 W/chip, busy ~300 W/chip => pod idle 25.6 kW, peak 76.8 kW.
+# Same saturating shape as Fig. 3 (shared power delivery/cooling overheads
+# dominate at low utilization).  Units remain watts.
+TPU_V5E_POD = make_saturating_power(
+    name="tpu-v5e-pod-256",
+    idle_watts=256 * 100.0,
+    peak_watts=256 * 300.0,
+    total_slots=7,
+)

@@ -1,0 +1,19 @@
+"""Reinforcement-learning repartitioning (paper §IV-D): DQN in pure JAX."""
+
+from repro.core.rl.dqn import DQNConfig, DQNLearner, ReplayBuffer
+from repro.core.rl.env import state_features, FEATURE_DIM, RewardWeights
+from repro.core.rl.agent import DQNAgent, greedy_policy
+from repro.core.rl.train import train_dqn, evaluate_policy
+
+__all__ = [
+    "DQNConfig",
+    "DQNLearner",
+    "ReplayBuffer",
+    "state_features",
+    "FEATURE_DIM",
+    "RewardWeights",
+    "DQNAgent",
+    "greedy_policy",
+    "train_dqn",
+    "evaluate_policy",
+]

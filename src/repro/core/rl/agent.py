@@ -1,0 +1,145 @@
+"""DQN agent <-> simulator glue.
+
+The agent is a :class:`repro.core.simulator.RepartitionPolicy`: at every
+decision event (arrival/completion) it reads the state features, accumulates
+the ET-scalarized reward since its previous decision, stores the transition,
+optionally trains, and returns the chosen configuration.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Optional, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.rl.dqn import DQNLearner
+from repro.core.rl.env import RewardWeights, state_features
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.simulator import MIGSimulator
+
+__all__ = ["DQNAgent", "greedy_policy"]
+
+
+class DQNAgent:
+    """Training-mode policy: epsilon-greedy actions + replay collection."""
+
+    def __init__(
+        self,
+        learner: DQNLearner,
+        rewards: RewardWeights = RewardWeights(),
+        initial_config: int = 2,
+        train: bool = True,
+        train_steps_per_decision: int = 1,
+        guide=None,  # optional policy whose actions warm-start the replay
+    ) -> None:
+        self.learner = learner
+        self.rewards = rewards
+        self.initial_config = initial_config
+        self.train = train
+        self.train_steps = train_steps_per_decision
+        self.guide = guide
+        self.use_guide = False
+        self.epsilon = 0.0
+        self._prev_state: Optional[np.ndarray] = None
+        self._prev_action: Optional[int] = None
+        self._prev_energy = 0.0
+        self._prev_tard = 0.0
+        self._pending_penalty = 0.0
+        self._nstep: collections.deque = collections.deque()
+        self.episode_reward = 0.0
+        self.losses: list = []
+
+    # -- episode lifecycle -------------------------------------------------
+    def begin_episode(self, epsilon: float) -> None:
+        self.epsilon = epsilon
+        self._prev_state = None
+        self._prev_action = None
+        self._prev_energy = 0.0
+        self._prev_tard = 0.0
+        self._pending_penalty = 0.0
+        self._nstep = collections.deque()
+        self.episode_reward = 0.0
+        self.losses = []
+
+    # -- n-step bookkeeping ---------------------------------------------
+    def _push_nstep(self, s, a, r, s_next, done: bool) -> None:
+        """Append (s, a, r); emit matured n-step transitions into replay."""
+        cfg = self.learner.cfg
+        self._nstep.append([s, a, r])
+        if done:
+            # flush everything with the true remaining returns
+            while self._nstep:
+                R, g = 0.0, 1.0
+                for (_, _, ri) in self._nstep:
+                    R += g * ri
+                    g *= cfg.gamma
+                s0, a0, _ = self._nstep.popleft()
+                self.learner.observe(s0, a0, R, s_next, True, g)
+        elif len(self._nstep) >= cfg.n_step:
+            R, g = 0.0, 1.0
+            for (_, _, ri) in self._nstep:
+                R += g * ri
+                g *= cfg.gamma
+            s0, a0, _ = self._nstep.popleft()
+            self.learner.observe(s0, a0, R, s_next, False, g)
+
+    def end_episode(self, sim: "MIGSimulator") -> None:
+        """Flush the terminal transition (done=True)."""
+        if self._prev_state is None:
+            return
+        r = self._interval_reward(sim)
+        self.episode_reward += r
+        terminal = state_features(sim.t, sim)
+        if self.train:
+            self._push_nstep(self._prev_state, self._prev_action, r, terminal, True)
+            self.learner.maybe_train(self.train_steps)
+        self._prev_state = None
+
+    # -- RepartitionPolicy protocol -----------------------------------------
+    def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        state = state_features(t, sim)
+        if self._prev_state is not None:
+            r = self._interval_reward(sim)
+            self.episode_reward += r
+            if self.train:
+                self._push_nstep(self._prev_state, self._prev_action, r, state, False)
+                loss = self.learner.maybe_train(self.train_steps)
+                if loss == loss:  # not NaN
+                    self.losses.append(loss)
+        if self.use_guide and self.guide is not None:
+            choice = self.guide.decide(t, sim)
+            action = (choice - 1) if choice is not None else (sim.partition.config_id - 1)
+        elif self.train:
+            action = self.learner.act(state, self.epsilon)
+        else:
+            action = self.learner.greedy_action(state)
+        self._prev_state = state
+        self._prev_action = action
+        config_id = action + 1  # actions 0..11 -> configs 1..12
+        if config_id != sim.partition.config_id:
+            # §IV-D-3 switch penalty, charged to this (s, a) on its next reward
+            self._pending_penalty = self.rewards.switch_penalty(len(sim.active))
+            return config_id
+        return None
+
+    def next_timer(self, t: float) -> Optional[float]:
+        return None
+
+    # -- reward bookkeeping --------------------------------------------------
+    def _interval_reward(self, sim: "MIGSimulator") -> float:
+        d_e = sim.energy_wh - self._prev_energy
+        d_t = sim.tardiness_integral - self._prev_tard
+        self._prev_energy = sim.energy_wh
+        self._prev_tard = sim.tardiness_integral
+        r = self.rewards.interval_reward(d_e, d_t) - self._pending_penalty
+        self._pending_penalty = 0.0
+        return r
+
+
+def greedy_policy(learner: DQNLearner, initial_config: int = 2) -> DQNAgent:
+    """Evaluation-mode agent: greedy, no replay writes, no training."""
+    agent = DQNAgent(learner, train=False, initial_config=initial_config)
+    agent.begin_episode(epsilon=0.0)
+    return agent

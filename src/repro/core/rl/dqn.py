@@ -1,0 +1,220 @@
+"""Deep Q-Network in pure JAX (paper §IV-D).
+
+Epsilon-greedy exploration, experience-replay buffer, target network, Huber
+TD loss, Adam — no external NN library.  The Q-network is a small MLP over
+the ``2+2m`` binned state features; the action space is the 12 MIG
+configurations of Fig. 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.slices import NUM_CONFIGS
+
+__all__ = ["DQNConfig", "ReplayBuffer", "DQNLearner"]
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    state_dim: int = 8
+    num_actions: int = NUM_CONFIGS
+    hidden: Tuple[int, ...] = (256, 256)
+    gamma: float = 0.99
+    n_step: int = 8  # n-step TD targets (credit over event chains)
+    lr: float = 5e-4
+    batch_size: int = 128
+    buffer_capacity: int = 200_000
+    min_buffer: int = 2_000
+    target_sync_every: int = 1_000
+    huber_delta: float = 1.0
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_episodes: int = 150
+    seed: int = 0
+
+
+def init_mlp(key: jax.Array, sizes: Tuple[int, ...]) -> Params:
+    params: Params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = sizes[i]
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((sizes[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def q_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return h @ w + b
+
+
+class ReplayBuffer:
+    """Circular numpy replay buffer."""
+
+    def __init__(self, capacity: int, state_dim: int) -> None:
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.g = np.zeros((capacity,), np.float32)  # bootstrap discount gamma^k
+        self.size = 0
+        self.pos = 0
+
+    def add(self, s, a, r, s2, done, g) -> None:
+        i = self.pos
+        self.s[i] = s
+        self.a[i] = a
+        self.r[i] = r
+        self.s2[i] = s2
+        self.done[i] = float(done)
+        self.g[i] = g
+        self.pos = (self.pos + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.size, size=batch)
+        return (
+            self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+            self.done[idx], self.g[idx],
+        )
+
+
+# --------------------------- Adam (self-contained) -------------------------
+
+
+def _adam_init(params: Params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_update(params: Params, grads: Params, state: Dict[str, Any], lr: float,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------- learner ----------------------------------
+
+
+class DQNLearner:
+    """Holds online/target params + optimizer state; jitted TD update."""
+
+    def __init__(self, cfg: DQNConfig) -> None:
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        sizes = (cfg.state_dim, *cfg.hidden, cfg.num_actions)
+        self.params = init_mlp(key, sizes)
+        self.target = jax.tree_util.tree_map(jnp.copy, self.params)
+        self.opt_state = _adam_init(self.params)
+        self.updates = 0
+        self.buffer = ReplayBuffer(cfg.buffer_capacity, cfg.state_dim)
+        self._rng = np.random.default_rng(cfg.seed + 1)
+
+        gamma, delta, lr = cfg.gamma, cfg.huber_delta, cfg.lr
+
+        @jax.jit
+        def update(params, target, opt_state, s, a, r, s2, done, g):
+            def loss_fn(p):
+                q = q_forward(p, s)
+                q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+                # Double DQN: online net picks the argmax, target net evaluates
+                a2 = jnp.argmax(q_forward(p, s2), axis=1)
+                q_next = jnp.take_along_axis(
+                    q_forward(target, s2), a2[:, None], axis=1
+                )[:, 0]
+                # n-step target: r is the discounted n-step sum, g = gamma^k
+                tgt = r + g * (1.0 - done) * q_next
+                td = q_sa - jax.lax.stop_gradient(tgt)
+                # Huber
+                abs_td = jnp.abs(td)
+                quad = jnp.minimum(abs_td, delta)
+                lin = abs_td - quad
+                return jnp.mean(0.5 * quad**2 + delta * lin)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_opt = _adam_update(params, grads, opt_state, lr)
+            return new_params, new_opt, loss
+
+        @jax.jit
+        def q_values(params, s):
+            return q_forward(params, s)
+
+        self._update = update
+        self._q_values = q_values
+
+    # -- acting ----------------------------------------------------------
+    def q(self, state: np.ndarray) -> np.ndarray:
+        out = self._q_values(self.params, jnp.asarray(state[None, :]))
+        return np.asarray(out)[0]
+
+    def act(self, state: np.ndarray, epsilon: float) -> int:
+        if self._rng.uniform() < epsilon:
+            return int(self._rng.integers(0, self.cfg.num_actions))
+        return int(np.argmax(self.q(state)))
+
+    def greedy_action(self, state: np.ndarray) -> int:
+        return int(np.argmax(self.q(state)))
+
+    # -- learning ---------------------------------------------------------
+    def observe(self, s, a, r, s2, done, g=None) -> None:
+        self.buffer.add(s, a, r, s2, done, self.cfg.gamma if g is None else g)
+
+    def maybe_train(self, steps: int = 1) -> float:
+        if self.buffer.size < self.cfg.min_buffer:
+            return float("nan")
+        loss = float("nan")
+        for _ in range(steps):
+            batch = self.buffer.sample(self._rng, self.cfg.batch_size)
+            self.params, self.opt_state, loss_j = self._update(
+                self.params, self.target, self.opt_state, *map(jnp.asarray, batch)
+            )
+            loss = float(loss_j)
+            self.updates += 1
+            if self.updates % self.cfg.target_sync_every == 0:
+                self.target = jax.tree_util.tree_map(jnp.copy, self.params)
+        return loss
+
+    def epsilon(self, episode: int) -> float:
+        c = self.cfg
+        frac = min(episode / max(c.eps_decay_episodes, 1), 1.0)
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        arrays: Dict[str, np.ndarray] = {}
+        for i, (w, b) in enumerate(self.params):
+            arrays[f"w{i}"] = np.asarray(w)
+            arrays[f"b{i}"] = np.asarray(b)
+        arrays["n_layers"] = np.asarray(len(self.params))
+        np.savez(path, **arrays)
+
+    def load(self, path: str) -> None:
+        data = np.load(path)
+        n = int(data["n_layers"])
+        self.params = [
+            (jnp.asarray(data[f"w{i}"]), jnp.asarray(data[f"b{i}"])) for i in range(n)
+        ]
+        self.target = jax.tree_util.tree_map(jnp.copy, self.params)

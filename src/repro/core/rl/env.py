@@ -1,0 +1,92 @@
+"""State representation and reward shaping for the repartitioning DQN.
+
+Paper §IV-D-1: the state concatenates ``2 + 2m`` features — the current MIG
+configuration, the time, and the (deadline, average duration) of the first
+``m`` jobs in the queue (m = 3, from Alibaba-trace load analysis).  The
+naturally continuous features are *binned* to discretize the state space; we
+feed the normalized bin indices to the Q-network.
+
+Reward (§IV-D-3): scalarization of energy and tardiness following the ET
+metric, accumulated between decision events; the repartitioning cost enters
+implicitly through the 4 s blocked-GPU penalty in the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, List
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.simulator import MIGSimulator
+
+__all__ = ["M_JOBS", "FEATURE_DIM", "state_features", "RewardWeights"]
+
+# The paper uses m=3, chosen "based on an analysis of typical GPU loads in
+# Alibaba's data center traces" (§IV-D-1).  Our §V-A calibration produces
+# deeper peak queues (see EXPERIMENTS.md), so the same load-driven analysis
+# selects m=8; the representation stays exactly the paper's 2+2m layout.
+M_JOBS = 8
+FEATURE_DIM = 2 + 2 * M_JOBS
+
+# Bin edges (minutes) for deadline slack and average duration.
+_BIN_EDGES = np.array([0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 40.0, 80.0, 160.0])
+_NUM_BINS = len(_BIN_EDGES) + 1  # 10 bins
+_TIME_BINS = 48  # half-hour bins over the day
+
+
+def _bin(v: float) -> int:
+    return int(np.searchsorted(_BIN_EDGES, v, side="right"))
+
+
+def state_features(t: float, sim: "MIGSimulator", m: int = M_JOBS) -> np.ndarray:
+    """Normalized feature vector in [0, 1]^(2+2m); missing jobs -> 1.0/0.0."""
+    feats: List[float] = []
+    feats.append((sim.partition.config_id - 1) / 11.0)
+    tod = (t / 60.0) % 24.0
+    feats.append(int(tod * 2) % _TIME_BINS / (_TIME_BINS - 1))
+    # first m jobs of the QUEUE in EDF order (paper §IV-D-1).  Padding with
+    # running jobs would hide queue pressure — the "no job" sentinel pattern
+    # is what lets the agent distinguish empty/loaded queues.
+    jobs = sim.queue_snapshot()
+    for i in range(m):
+        if i < len(jobs):
+            slack = max(jobs[i].deadline - t, 0.0)
+            feats.append(_bin(slack) / (_NUM_BINS - 1))
+            feats.append(_bin(jobs[i].mean_duration_all_sizes()) / (_NUM_BINS - 1))
+        else:
+            feats.append(1.0)  # "no job" sentinel: max slack
+            feats.append(0.0)  # zero duration
+    return np.asarray(feats, dtype=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardWeights:
+    """ET-scalarized reward: r = -(a*dE + dTard/m) / (a+1) / scale.
+
+    ``a`` ~ t/(2s) calibrated on the diurnal workload (mean energy s ~ 4.1 kWh
+    per day, mean avg-tardiness t ~ 1.2 min).  The tardiness integral is
+    normalized by the expected jobs/episode so the summed episode reward
+    approximates -ET of the episode (§IV-A uses *average* tardiness).
+    """
+
+    a: float = 5e-5
+    tardiness_norm: float = 600.0  # ~ expected jobs per diurnal day
+    scale: float = 0.01  # keeps |r| O(1) for stable TD learning
+    # §IV-D-3: "changing configurations incurs a performance penalty
+    # equivalent to the time required for the repartitioning process" (4 s).
+    # The stall also occurs physically in the simulator; the explicit term
+    # de-noises credit assignment for the switch decision itself.
+    switch_penalty_min: float = 4.0 / 60.0
+
+    def interval_reward(self, d_energy_wh: float, d_tardiness: float) -> float:
+        y = d_tardiness / self.tardiness_norm
+        return -((self.a * d_energy_wh + y) / (self.a + 1.0)) / self.scale
+
+    def switch_penalty(self, jobs_in_system: int) -> float:
+        """Reward cost of a repartition: ~4 s of lost service for the whole
+        system, expressed in the same normalized-tardiness units."""
+        y = self.switch_penalty_min * max(jobs_in_system, 1) / self.tardiness_norm
+        return (y / (self.a + 1.0)) / self.scale

@@ -1,0 +1,445 @@
+"""Event-driven MIG simulator with preemption and dynamic repartitioning.
+
+Implements the paper's simulation setting (§IV, §V-A):
+
+* events: job arrival, job completion, critical-laxity timer (LLF/LALF),
+  repartition-complete, and policy timer (Day/Night benchmark boundaries);
+* at arrival/completion the repartitioning policy may choose a new
+  configuration (paper §IV-D-2 "event-based architecture"); repartitioning
+  preempts all running jobs and blocks the GPU for 4 seconds (§IV-D-3);
+* between consecutive events the set of running jobs is constant, so energy
+  (Fig. 3 power curve) and the tardiness integral are integrated exactly;
+* preemptions are counted by diffing consecutive assignments (a running job
+  that is paused or moved counts once).
+
+The simulator is deterministic given the job list and policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.jobs import Job
+from repro.core.metrics import SimResult
+from repro.core.power import A100_250W, PowerModel
+from repro.core.schedulers import Assignment, Scheduler
+from repro.core.slices import MIG_CONFIGS, Partition, config
+
+__all__ = [
+    "RepartitionPolicy",
+    "StaticPolicy",
+    "NoMIGPolicy",
+    "DayNightPolicy",
+    "CallbackPolicy",
+    "MIGSimulator",
+    "REPARTITION_PENALTY_MIN",
+]
+
+# §IV-D-3: destroying/recreating MIG slices takes ~4 seconds.
+REPARTITION_PENALTY_MIN = 4.0 / 60.0
+
+_EPS = 1e-9
+
+
+class RepartitionPolicy(Protocol):
+    """Decides the MIG configuration at decision points."""
+
+    initial_config: int
+
+    def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        """Return a config id to switch to, or None to stay."""
+        ...
+
+    def next_timer(self, t: float) -> Optional[float]:
+        """Next time-triggered decision point strictly after ``t`` (or None)."""
+        ...
+
+
+class StaticPolicy:
+    """Fixed configuration; never repartitions (Static MIG benchmark)."""
+
+    def __init__(self, config_id: int) -> None:
+        self.initial_config = config_id
+
+    def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        return None
+
+    def next_timer(self, t: float) -> Optional[float]:
+        return None
+
+
+class NoMIGPolicy(StaticPolicy):
+    """Full GPU, MIG disabled (No MIG benchmark).
+
+    Config 1 (one 7g.40gb slice) with ``mig_enabled=False`` so that linear
+    jobs get the §V-A 6 % full-GPU speedup.
+    """
+
+    def __init__(self) -> None:
+        super().__init__(config_id=1)
+
+
+class DayNightPolicy:
+    """Twice-daily repartitioning benchmark (§V-A).
+
+    Config ``day_config`` during 5:00-17:00, ``night_config`` otherwise.
+    """
+
+    def __init__(self, day_config: int = 6, night_config: int = 2) -> None:
+        self.day_config = day_config
+        self.night_config = night_config
+        self.day_start = 5 * 60.0
+        self.day_end = 17 * 60.0
+        self.initial_config = self._target(0.0)
+
+    def _target(self, t: float) -> int:
+        tod = t % (24 * 60.0)
+        return (
+            self.day_config
+            if self.day_start <= tod < self.day_end
+            else self.night_config
+        )
+
+    def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        tgt = self._target(t)
+        return tgt if tgt != sim.partition.config_id else None
+
+    def next_timer(self, t: float) -> Optional[float]:
+        day = 24 * 60.0
+        base = math.floor(t / day) * day
+        for bound in (base + self.day_start, base + self.day_end,
+                      base + day + self.day_start):
+            if bound > t + _EPS:
+                return bound
+        return None  # pragma: no cover
+
+
+class CallbackPolicy:
+    """Adapter: wraps a ``(t, sim) -> Optional[int]`` callable (RL agent)."""
+
+    def __init__(
+        self,
+        fn: Callable[[float, "MIGSimulator"], Optional[int]],
+        initial_config: int = 2,
+    ) -> None:
+        self._fn = fn
+        self.initial_config = initial_config
+
+    def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        return self._fn(t, sim)
+
+    def next_timer(self, t: float) -> Optional[float]:
+        return None
+
+
+class _Ev(enum.IntEnum):
+    ARRIVAL = 0
+    COMPLETION = 1
+    CRITICAL = 2
+    REPART_DONE = 3
+    TIMER = 4
+
+
+class MIGSimulator:
+    """One GPU (or TPU-pod analogue), one scheduler, one repartition policy."""
+
+    def __init__(
+        self,
+        scheduler: Scheduler,
+        power_model: PowerModel = A100_250W,
+        mig_enabled: bool = True,
+        repartition_penalty_min: float = REPARTITION_PENALTY_MIN,
+        max_events: int = 5_000_000,
+    ) -> None:
+        self.scheduler = scheduler
+        self.power = power_model
+        self.mig_enabled = mig_enabled
+        self.penalty = repartition_penalty_min
+        self.max_events = max_events
+
+        # runtime state (reset per run)
+        self.t = 0.0
+        self.partition: Partition = config(1)
+        self.active: Dict[int, Job] = {}
+        self.assignment: Assignment = {}
+        self.completed: List[Job] = []
+        self.energy_wh = 0.0
+        self.tardiness_integral = 0.0
+        self.preemptions = 0
+        self.repartitions = 0
+        self.busy_slot_minutes = 0.0
+        self.util_histogram: Dict[int, float] = {}
+        self.config_trace: List[Tuple[float, int]] = []
+        self._repartitioning_until: Optional[float] = None
+        self._pending_config: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def busy_slots(self) -> float:
+        if self._repartitioning_until is not None:
+            return 0.0
+        return float(
+            sum(self.partition.slices[s].slots for s in self.assignment.values())
+        )
+
+    def queue_snapshot(self) -> List[Job]:
+        """Waiting (unassigned, incomplete) jobs sorted EDF-style."""
+        waiting = [
+            j for j in self.active.values() if not j.done and j.job_id not in self.assignment
+        ]
+        waiting.sort(key=lambda j: (j.deadline, j.arrival, j.job_id))
+        return waiting
+
+    # ------------------------------------------------------------------
+    def _advance(self, new_t: float) -> None:
+        dt = new_t - self.t
+        if dt < -1e-6:
+            raise RuntimeError(f"time went backwards: {self.t} -> {new_t}")
+        if dt <= 0.0:
+            self.t = new_t
+            return
+        busy = self.busy_slots
+        self.energy_wh += self.power.energy_wh(busy, dt)
+        self.busy_slot_minutes += busy * dt
+        self.util_histogram[int(round(busy))] = (
+            self.util_histogram.get(int(round(busy)), 0.0) + dt
+        )
+        # exact tardiness integral: each incomplete job past its deadline
+        # contributes the overlap of [t, new_t] with [deadline, inf)
+        for job in self.active.values():
+            if not job.done and job.deadline < new_t:
+                self.tardiness_integral += new_t - max(job.deadline, self.t)
+        # deplete running jobs
+        for jid, sl in self.assignment.items():
+            job = self.active[jid]
+            rate = job.rate_on(self.partition.slices[sl].slots, self.mig_enabled)
+            job.remaining = max(job.remaining - rate * dt, 0.0)
+        self.t = new_t
+
+    def _complete_finished(self) -> List[Job]:
+        done = []
+        for jid in list(self.assignment):
+            job = self.active[jid]
+            if job.remaining <= _EPS:
+                job.remaining = 0.0
+                job.completion = self.t
+                done.append(job)
+                del self.assignment[jid]
+                del self.active[jid]
+                self.completed.append(job)
+        return done
+
+    def _apply_assignment(self, new: Assignment) -> None:
+        for jid, old_slice in self.assignment.items():
+            if jid not in new or new[jid] != old_slice:
+                self.preemptions += 1
+                self.active[jid].preemptions += 1
+        for jid, sl in new.items():
+            self.active[jid].last_slice = sl
+        self.assignment = dict(new)
+
+    def _reschedule(self) -> None:
+        if self._repartitioning_until is not None:
+            return
+        jobs = [j for j in self.active.values() if not j.done]
+        new = self.scheduler.assign(
+            self.t, self.partition, jobs, self.assignment, self.mig_enabled
+        )
+        # drop stale ids defensively
+        new = {jid: s for jid, s in new.items() if jid in self.active}
+        self._apply_assignment(new)
+
+    def _start_repartition(self, config_id: int) -> None:
+        # all running jobs are preempted back to the queue
+        for jid in list(self.assignment):
+            self.preemptions += 1
+            self.active[jid].preemptions += 1
+        self.assignment = {}
+        self._pending_config = config_id
+        self._repartitioning_until = self.t + self.penalty
+        self.repartitions += 1
+
+    def _finish_repartition(self) -> None:
+        assert self._pending_config is not None
+        self.partition = config(self._pending_config)
+        self.config_trace.append((self.t, self.partition.config_id))
+        self._pending_config = None
+        self._repartitioning_until = None
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        jobs: Sequence[Job],
+        policy: Optional[RepartitionPolicy] = None,
+        initial_config: Optional[int] = None,
+        decision_hook: Optional[Callable[[float, "MIGSimulator"], None]] = None,
+    ) -> SimResult:
+        """Simulate to completion of all jobs; returns a :class:`SimResult`.
+
+        ``decision_hook`` fires at every decision point *before* the policy —
+        used by the RL agent to harvest transitions.
+        """
+        policy = policy or StaticPolicy(config_id=initial_config or 3)
+        cfg0 = initial_config if initial_config is not None else policy.initial_config
+
+        # reset state
+        self.t = 0.0
+        self.partition = config(cfg0)
+        self.active = {}
+        self.assignment = {}
+        self.completed = []
+        self.energy_wh = 0.0
+        self.tardiness_integral = 0.0
+        self.preemptions = 0
+        self.repartitions = 0
+        self.busy_slot_minutes = 0.0
+        self.util_histogram = {}
+        self.config_trace = [(0.0, cfg0)]
+        self._repartitioning_until = None
+        self._pending_config = None
+
+        seq = itertools.count()
+        heap: List[Tuple[float, int, int, int, int]] = []  # (t, kind, seq, payload, version)
+        version = 0
+        timer_scheduled: set = set()
+
+        def push(t: float, kind: _Ev, payload: int = -1, ver: int = -1) -> None:
+            heapq.heappush(heap, (t, int(kind), next(seq), payload, ver))
+
+        for job in jobs:
+            push(job.arrival, _Ev.ARRIVAL, job.job_id)
+        jobs_by_id = {j.job_id: j for j in jobs}
+        arrivals_left = len(jobs_by_id)
+
+        def push_followups() -> None:
+            nonlocal version
+            version += 1
+            if self._repartitioning_until is not None:
+                return
+            # earliest completion among running jobs
+            best_t, best_id = math.inf, -1
+            for jid, sl in self.assignment.items():
+                job = self.active[jid]
+                ft = job.finish_time_on(
+                    self.t, self.partition.slices[sl].slots, self.mig_enabled
+                )
+                if ft < best_t:
+                    best_t, best_id = ft, jid
+            if best_id >= 0 and math.isfinite(best_t):
+                push(max(best_t, self.t), _Ev.COMPLETION, best_id, version)
+            # critical-laxity timer (LLF/LALF)
+            crit = self.scheduler.next_critical_time(
+                self.t, self.partition,
+                list(self.active.values()), self.assignment, self.mig_enabled,
+            )
+            if crit is not None:
+                push(crit, _Ev.CRITICAL, -1, version)
+
+        def maybe_decide() -> None:
+            if self._repartitioning_until is not None:
+                return
+            if decision_hook is not None:
+                decision_hook(self.t, self)
+            choice = policy.decide(self.t, self)
+            if choice is not None and choice != self.partition.config_id:
+                if choice not in MIG_CONFIGS:
+                    raise KeyError(f"policy chose invalid config {choice}")
+                self._start_repartition(choice)
+                push(self._repartitioning_until, _Ev.REPART_DONE)
+
+        def schedule_policy_timer() -> None:
+            # no more timers once all arrivals are in and the queue is drained
+            # (a perpetual Day/Night boundary chain would never terminate)
+            if arrivals_left == 0 and not self.active:
+                return
+            nt = policy.next_timer(self.t)
+            if nt is not None and nt not in timer_scheduled:
+                timer_scheduled.add(nt)
+                push(nt, _Ev.TIMER)
+
+        schedule_policy_timer()
+        push_followups()
+
+        events = 0
+        while heap:
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError("event budget exceeded — likely a scheduling livelock")
+            ev_t, kind, _, payload, ver = heapq.heappop(heap)
+            kind = _Ev(kind)
+            if kind in (_Ev.COMPLETION, _Ev.CRITICAL) and ver != version:
+                continue  # stale
+            self._advance(ev_t)
+
+            if kind == _Ev.ARRIVAL:
+                job = jobs_by_id[payload]
+                self.active[job.job_id] = job
+                arrivals_left -= 1
+                maybe_decide()
+                self._reschedule()
+                self._complete_finished()
+                push_followups()
+            elif kind == _Ev.COMPLETION:
+                finished = self._complete_finished()
+                if not finished:
+                    # numerical race: re-push slightly later
+                    push(self.t + 1e-6, _Ev.COMPLETION, payload, version)
+                    continue
+                maybe_decide()
+                self._reschedule()
+                self._complete_finished()
+                push_followups()
+            elif kind == _Ev.CRITICAL:
+                # mark newly-critical waiting jobs (bounded per job)
+                for job in self.queue_snapshot():
+                    lax = self.scheduler.job_laxity(
+                        self.t, self.partition, job, self.mig_enabled
+                    )
+                    if (
+                        lax <= self.scheduler.critical_laxity_threshold + 1e-6
+                        and job.critical_events < self.scheduler.max_critical_preemptions
+                    ):
+                        job.critical_events += 1
+                self._reschedule()
+                self._complete_finished()
+                push_followups()
+            elif kind == _Ev.REPART_DONE:
+                self._finish_repartition()
+                self._reschedule()
+                self._complete_finished()
+                push_followups()
+            elif kind == _Ev.TIMER:
+                maybe_decide()
+                self._reschedule()
+                self._complete_finished()
+                schedule_policy_timer()
+                push_followups()
+
+        # all arrivals processed and queue drained?
+        if self.active:
+            raise RuntimeError(
+                f"simulation ended with {len(self.active)} unfinished jobs"
+            )
+
+        m = max(len(self.completed), 1)
+        total_tard = sum(j.tardiness() for j in self.completed)
+        return SimResult(
+            energy_wh=self.energy_wh,
+            avg_tardiness=total_tard / m,
+            num_jobs=len(self.completed),
+            total_tardiness=total_tard,
+            preemptions=self.preemptions,
+            repartitions=self.repartitions,
+            max_tardiness=max((j.tardiness() for j in self.completed), default=0.0),
+            deadline_misses=sum(1 for j in self.completed if j.tardiness() > 1e-9),
+            busy_slot_minutes=self.busy_slot_minutes,
+            extra={
+                "makespan_min": self.t,
+                "tardiness_integral": self.tardiness_integral,
+            },
+        )

@@ -1,0 +1,155 @@
+"""MIG slice model and the 12 partition configurations of Fig. 1.
+
+The paper partitions an A100-40GB into slices of compute size 1, 2, 3, 4 or 7
+"slots" (SM fractions) with an associated memory size.  Only 12 configurations
+(Fig. 1) are considered; configuration ids are 1-based to match the paper.
+
+This module is hardware-agnostic: a :class:`SliceType` is (compute slots,
+memory GB) and a :class:`Partition` is an ordered tuple of slice types.  The
+TPU adaptation (``repro.cluster``) reuses the same partition table with chips
+substituted for SM slots (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+__all__ = [
+    "SliceType",
+    "Partition",
+    "MIG_CONFIGS",
+    "NUM_CONFIGS",
+    "TOTAL_SLOTS",
+    "ALL_SLICE_SIZES",
+    "config",
+    "config_ids",
+]
+
+TOTAL_SLOTS = 7
+ALL_SLICE_SIZES = (1, 2, 3, 4, 7)
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceType:
+    """A MIG slice type, e.g. ``2g.10gb`` -> SliceType(2, 10)."""
+
+    slots: int  # compute size in "g" units (1,2,3,4,7)
+    memory_gb: int
+
+    def __post_init__(self) -> None:
+        if self.slots not in ALL_SLICE_SIZES:
+            raise ValueError(f"invalid slice size {self.slots}g")
+
+    @property
+    def name(self) -> str:
+        return f"{self.slots}g.{self.memory_gb}gb"
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return self.name
+
+
+# Shorthand constructors for the A100-40GB slice types used in Fig. 1.
+S1_5 = SliceType(1, 5)
+S1_10 = SliceType(1, 10)
+S2_10 = SliceType(2, 10)
+S3_20 = SliceType(3, 20)
+S4_20 = SliceType(4, 20)
+S7_40 = SliceType(7, 40)
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """An ordered MIG partition (one row of Fig. 1)."""
+
+    config_id: int
+    slices: Tuple[SliceType, ...]
+
+    @property
+    def num_slices(self) -> int:
+        return len(self.slices)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(s.slots for s in self.slices)
+
+    @property
+    def total_memory_gb(self) -> int:
+        return sum(s.memory_gb for s in self.slices)
+
+    def slot_sizes(self) -> Tuple[int, ...]:
+        return tuple(s.slots for s in self.slices)
+
+    def fastest_slice_index(self) -> int:
+        """Index of the largest-compute slice (ties -> first)."""
+        return max(range(len(self.slices)), key=lambda i: self.slices[i].slots)
+
+    def slowest_slice_index(self) -> int:
+        return min(range(len(self.slices)), key=lambda i: self.slices[i].slots)
+
+    def sorted_indices(self, descending: bool = False) -> List[int]:
+        """Slice indices sorted by compute size ascending (or descending)."""
+        return sorted(
+            range(len(self.slices)),
+            key=lambda i: self.slices[i].slots,
+            reverse=descending,
+        )
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        body = " + ".join(s.name for s in self.slices)
+        return f"cfg{self.config_id}[{body}]"
+
+
+def _mk(config_id: int, *slices: SliceType) -> Partition:
+    return Partition(config_id=config_id, slices=tuple(slices))
+
+
+# Fig. 1 — the 12 configurations of an A100-40GB considered by the paper.
+MIG_CONFIGS: Dict[int, Partition] = {
+    1: _mk(1, S7_40),
+    2: _mk(2, S4_20, S3_20),
+    3: _mk(3, S4_20, S2_10, S1_10),
+    4: _mk(4, S4_20, S1_5, S1_5, S1_10),
+    5: _mk(5, S3_20, S3_20),  # note: 1-slot "hole" (6 of 7 slots used)
+    6: _mk(6, S2_10, S2_10, S3_20),
+    7: _mk(7, S2_10, S1_5, S1_5, S3_20),
+    8: _mk(8, S1_5, S1_5, S1_5, S1_5, S3_20),
+    9: _mk(9, S2_10, S2_10, S2_10, S1_10),
+    10: _mk(10, S2_10, S2_10, S1_5, S1_5, S1_10),
+    11: _mk(11, S2_10, S1_5, S1_5, S1_5, S1_5, S1_10),
+    12: _mk(12, S1_5, S1_5, S1_5, S1_5, S1_5, S1_5, S1_10),
+}
+
+NUM_CONFIGS = len(MIG_CONFIGS)
+
+
+def config(config_id: int) -> Partition:
+    """Return the partition for a 1-based Fig. 1 configuration id."""
+    try:
+        return MIG_CONFIGS[config_id]
+    except KeyError as e:  # pragma: no cover - defensive
+        raise KeyError(
+            f"unknown MIG config {config_id}; valid ids {sorted(MIG_CONFIGS)}"
+        ) from e
+
+
+def config_ids() -> Sequence[int]:
+    return tuple(sorted(MIG_CONFIGS))
+
+
+def _validate_table() -> None:
+    """Sanity-check the Fig. 1 table (invoked at import, cheap)."""
+    for cid, part in MIG_CONFIGS.items():
+        if part.config_id != cid:
+            raise AssertionError(f"config id mismatch for {cid}")
+        if part.total_slots > TOTAL_SLOTS:
+            raise AssertionError(f"config {cid} exceeds {TOTAL_SLOTS} slots")
+        if part.total_memory_gb > 40:
+            raise AssertionError(f"config {cid} exceeds 40GB")
+        # at most one 1g.10gb slice per configuration (paper §III-A)
+        n_1g10 = sum(1 for s in part.slices if s == S1_10)
+        if n_1g10 > 1:
+            raise AssertionError(f"config {cid} has {n_1g10} 1g.10gb slices")
+
+
+_validate_table()

@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (host-sharded token streams)."""
+
+from repro.data.pipeline import SyntheticLM, make_batch_specs
+
+__all__ = ["SyntheticLM", "make_batch_specs"]

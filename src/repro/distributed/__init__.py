@@ -1,0 +1,12 @@
+"""Distributed runtime: sharding rules, collectives, compression, fault
+tolerance.  Meshes themselves are built in :mod:`repro.launch.mesh`.
+"""
+
+from repro.distributed.sharding import (
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    DP_AXES,
+)
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings", "DP_AXES"]

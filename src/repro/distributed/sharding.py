@@ -1,0 +1,241 @@
+"""Sharding rules: FSDP x TP 2-D parameter sharding, EP for MoE, SP for
+long-context decode.
+
+Mesh axes:
+* ``data``  — batch / FSDP axis (16 per pod),
+* ``model`` — tensor-parallel / expert-parallel / sequence axis (16 per pod),
+* ``pod``   — present on the multi-pod mesh; pure data parallelism
+              (parameters replicated across pods, gradients reduced over it).
+
+Parameter rule: 2-D weights are sharded (contract-dim -> ``data`` [FSDP,
+gathered at use], parallel-dim -> ``model`` [Megatron TP, stays sharded]).
+Expert stacks put the expert dim on ``model`` (EP).  Rules are resolved by
+leaf *name* via tree paths, so one table covers every architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DP_AXES",
+    "param_spec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "out_shardings_like",
+]
+
+# batch ("data-parallel") axes: pod axis, when present, is outermost DP
+DP_AXES = ("pod", "data")
+
+
+def _dp(mesh: Mesh) -> Any:
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+# --------------------------- parameter rules -------------------------------
+
+# leaf name -> spec template for the UNSTACKED (per-layer) array.
+# "D" = data axis, "M" = model axis, None = replicated dim.
+_RULES = {
+    # projections: (in, out)
+    "wq": ("D", "M"),
+    "wk": ("D", "M"),
+    "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "w_up": ("D", "M"),
+    "w_gate": ("D", "M"),
+    "w_down": ("M", "D"),
+    "w_ffn_up": ("D", "M"),
+    "w_ffn_down": ("M", "D"),
+    "w_in": ("D", "M"),
+    "w_out": ("M", "D"),
+    "w_xdbc": ("M", None),
+    "w_dt": (None, "M"),
+    "w_i": ("M", None),
+    "w_f": ("M", None),
+    "w_z": ("D", "M"),
+    "w_o": ("D", "M"),
+    # embeddings: (vocab/time, d_model)
+    "embed": ("M", "D"),
+    "unembed": ("M", "D"),
+    "pos": (None, "D"),
+    # misc
+    "router": ("D", None),
+    "conv": (None, "M"),
+    "log_a": ("M", None),
+    "dt_bias": ("M",),
+    "d_skip": ("M",),
+    "scale": (None,),
+    "bias": (None,),
+    # sLSTM recurrent blocks (small, head-blocked)
+    "r_i": (None, None, None),
+    "r_f": (None, None, None),
+    "r_z": (None, None, None),
+    "r_o": (None, None, None),
+}
+
+# MoE expert stacks carry a leading expert dim -> model axis (EP); the
+# per-expert matrices are then FSDP-sharded on their d_model dim.
+_MOE_RULES = {
+    "w_up": ("M", "D", None),
+    "w_gate": ("M", "D", None),
+    "w_down": ("M", None, "D"),
+}
+
+
+def _axis(token: Optional[str]) -> Optional[str]:
+    return {"D": "data", "M": "model", None: None}[token]
+
+
+def param_spec(path: Tuple[Any, ...], leaf: Any) -> P:
+    """PartitionSpec for one parameter leaf, from its tree path."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf_name = names[-1]
+    in_moe = "moe" in names
+    in_blocks = "blocks" in names
+
+    if in_moe and leaf_name in _MOE_RULES:
+        base = _MOE_RULES[leaf_name]
+    elif leaf_name in _RULES:
+        base = _RULES[leaf_name]
+    else:
+        base = (None,) * (leaf.ndim - (2 if in_blocks else 0) - ("layers" in names))
+
+    spec = [_axis(t) for t in base]
+    # stacked leading axes: pattern repeats (blocks) / encoder layer stack
+    ndim = leaf.ndim
+    while len(spec) < ndim:
+        spec.insert(0, None)
+    if len(spec) > ndim:  # e.g. rules longer than a squeezed leaf
+        spec = spec[-ndim:]
+    # drop shardings that don't divide the dim evenly
+    return P(*spec)
+
+
+def _validated(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_shardings(params: Any, mesh: Mesh, mode: str = "train") -> Any:
+    """NamedSharding tree matching a parameter (or abstract-param) tree.
+
+    ``mode="serve"``: inference keeps weights *resident* — the FSDP ("data")
+    dimension is dropped from every spec (pure TP/EP) whenever the resulting
+    per-device footprint fits HBM.  Without this, decode steps all-gather the
+    FSDP shards every token (§Perf hillclimb 2: mixtral decode was spending
+    181 GB/device/token on weight gathers).  Models too big for 1-axis
+    sharding (nemotron-340b) keep the 2-D layout.
+    """
+    serve = mode == "serve"
+    if serve:
+        total_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(params)
+        )
+        # would pure model-axis sharding fit comfortably (<= half of HBM)?
+        per_dev = total_bytes / mesh.shape["model"]
+        serve = per_dev <= 8 * 1024**3
+
+    def mk(path, leaf):
+        spec = param_spec(path, leaf)
+        if serve:
+            spec = P(*[None if ax == "data" else ax for ax in spec])
+            names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+            leaf_name = names[-1]
+            if "moe" in names and leaf_name in _MOE_RULES:
+                E = leaf.shape[-3] if leaf.ndim >= 3 else 0
+                if E % mesh.shape["model"] != 0:
+                    # EP impossible (E < axis): TP-shard the expert FFN dims
+                    # (contraction-dim psum at decode is tokens-sized, tiny)
+                    base = (
+                        (None, None, "model")
+                        if leaf_name in ("w_up", "w_gate")
+                        else (None, "model", None)
+                    )
+                    spec = P(*([None] * (leaf.ndim - 3)), *base)
+        spec = _validated(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(mk, params)
+
+
+# --------------------------- activations -----------------------------------
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    """Input batch: leading (batch) dim over the DP axes, rest replicated."""
+    dp = _dp(mesh)
+
+    def mk(leaf):
+        dims = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+        first = dp if leaf.shape and leaf.shape[0] % dims == 0 else None
+        return NamedSharding(mesh, P(first, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(mk, batch)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, batch: int) -> Any:
+    """Decode-state sharding.
+
+    KV caches (stacked: (R, B, L, H, D)) shard batch over the DP axes when it
+    divides evenly; the sequence dim takes the ``model`` axis (SP — the 32k
+    KV cache is the dominant decode footprint) and, for batch=1 long-context,
+    whatever DP axes are idle join the sequence dim.
+    Recurrent states (mamba/xlstm) shard their channel dims on ``model``.
+    """
+    dp = _dp(mesh)
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def mk(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        leaf_name = names[-1]
+        if leaf_name in ("k", "v") and leaf.ndim == 5:  # (R, B, L, H, D)
+            _, B, L, H, D = leaf.shape
+            if B % dp_size == 0:
+                seq_ax = "model" if L % mesh.shape["model"] == 0 else None
+                return NamedSharding(mesh, P(None, dp, seq_ax, None, None))
+            # tiny batch (long-context): give the sequence every axis we can
+            seq_axes = tuple(
+                a for a in ("data", "model") if L % mesh.shape[a] == 0
+            )
+            if len(seq_axes) == 2 and L % (mesh.shape["data"] * mesh.shape["model"]) != 0:
+                seq_axes = ("model",)
+            spec = seq_axes if len(seq_axes) > 1 else (seq_axes[0] if seq_axes else None)
+            return NamedSharding(mesh, P(None, None, spec, None, None))
+        if leaf_name in ("h", "C") and leaf.ndim >= 3:  # recurrent states
+            B = leaf.shape[1]
+            bspec = dp if B % dp_size == 0 else None
+            rest = [None] * (leaf.ndim - 2)
+            if leaf.ndim >= 3 and leaf.shape[2] % mesh.shape["model"] == 0:
+                rest[0] = "model"
+            return NamedSharding(mesh, P(None, bspec, *rest))
+        # conv windows / norm stats / small states
+        B = leaf.shape[1] if leaf.ndim > 1 else 0
+        bspec = dp if B and B % dp_size == 0 else None
+        return NamedSharding(
+            mesh, P(None, bspec, *([None] * max(leaf.ndim - 2, 0)))
+        )
+
+    return jax.tree_util.tree_map_with_path(mk, cache)
+
+
+def out_shardings_like(tree: Any, mesh: Mesh) -> Any:
+    """Replicated output shardings for scalars/metrics."""
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree
+    )

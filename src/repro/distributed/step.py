@@ -1,0 +1,112 @@
+"""Train / serve step builders (pjit-ready pure functions).
+
+``make_train_step`` supports microbatch gradient accumulation via lax.scan —
+required for the biggest assigned archs: with layer-scan remat the saved
+residuals scale with the *microbatch*, so accumulation bounds live
+activations (EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn as model_loss
+from repro.models import decode_step as model_decode
+from repro.models import forward as model_forward
+from repro.models.config import ArchConfig
+from repro.optim import AdamW
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step"]
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: AdamW,
+    accum_steps: int = 1,
+    impl: str = "auto",
+    grad_accum_dtype: str = "float32",
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_accum_dtype="bfloat16"`` halves the accumulation carry — used by
+    the >=100B archs where the fp32 grad tree alone is ~5 GB/device
+    (EXPERIMENTS.md §Dry-run memory notes).  The adds still run in fp32.
+    """
+    acc_dt = jnp.dtype(grad_accum_dtype)
+
+    def loss_of(params, batch):
+        return model_loss(cfg, params, batch, impl=impl)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # split leading batch dim into (accum, micro) and scan
+            def reshape(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(reshape, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: (
+                        a.astype(jnp.float32) + b_.astype(jnp.float32)
+                    ).astype(acc_dt),
+                    g_acc,
+                    g,
+                )
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) / accum_steps, grads
+            )
+            loss = loss / accum_steps
+
+        params2, opt_state2 = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state2.step}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, impl: str = "auto") -> Callable:
+    """Returns serve_step(params, cache, token, index) -> (logits, cache).
+
+    One new token per request with the KV cache / recurrent state carried —
+    the ``decode_*`` and ``long_*`` dry-run shapes lower this function.
+    """
+
+    def serve_step(params, cache, token, index, enc_out=None):
+        return model_decode(cfg, params, cache, token, index, enc_out=enc_out, impl=impl)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, impl: str = "auto") -> Callable:
+    """Returns prefill_step(params, batch) -> last-position logits."""
+
+    def prefill_step(params, batch):
+        logits, _ = model_forward(cfg, params, batch, impl=impl)
+        return logits[:, -1, :]
+
+    return prefill_step

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+The paper's own contribution is a scheduling layer (no custom device
+kernels); these kernels optimize the LM substrate the cluster layer
+schedules — attention, selective-SSM, mLSTM and MoE grouped matmul.
+
+Each kernel ships with a pure-jnp oracle (:mod:`repro.kernels.ref`) and a
+dispatching wrapper (:mod:`repro.kernels.ops`).  Kernels are validated in
+interpret mode on CPU; ``pallas`` impl is the TPU deployment path.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm import gmm
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.mlstm import mlstm_chunkwise
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "gmm",
+    "mamba_scan",
+    "mlstm_chunkwise",
+]

@@ -1,0 +1,87 @@
+"""Jit-ready wrappers that dispatch each op to its Pallas kernel or oracle.
+
+Dispatch policy (``impl``):
+* ``"pallas"``    — the TPU kernel (compiled; requires a TPU backend),
+* ``"interpret"`` — the same kernel body executed by the Pallas interpreter
+                    (CPU correctness path; used by the kernel test sweeps),
+* ``"ref"``       — the pure-jnp oracle (XLA-native; the dry-run path, so
+                    lowered HLO stays collective-analyzable and compile-fast),
+* ``"auto"``      — pallas on TPU backends, ref elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.gmm import gmm as _gmm
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.mlstm import mlstm_chunkwise as _mlstm
+
+__all__ = ["attention", "mamba_scan", "mlstm", "gmm", "resolve_impl"]
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        )
+    return _fa(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        interpret=(impl == "interpret"),
+    )
+
+
+def mamba_scan(x, dt, A, B, C, D, *, impl: str = "auto") -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.mamba_scan_ref(x, dt, A, B, C, D)
+    return _mamba(x, dt, A, B, C, D, interpret=(impl == "interpret"))
+
+
+def mlstm(q, k, v, i_gate, f_gate, *, chunk: int = 128, impl: str = "auto") -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        # chunked-scan form: O(T*L) memory (the quadratic oracle is for tests)
+        T = q.shape[1]
+        return _ref.mlstm_chunked_scan(
+            q, k, v, i_gate, f_gate, chunk=min(256, T)
+        )
+    return _mlstm(q, k, v, i_gate, f_gate, chunk=chunk, interpret=(impl == "interpret"))
+
+
+def gmm(lhs, rhs, group_ids, group_sizes=None, *, impl: str = "auto") -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        assert group_sizes is not None, "ref gmm needs group_sizes"
+        return _ref.gmm_ref(lhs, rhs, group_sizes)
+    return _gmm(lhs, rhs, group_ids, interpret=(impl == "interpret"))

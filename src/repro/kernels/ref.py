@@ -1,0 +1,269 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference semantics*: each Pallas kernel must match its oracle
+to float tolerance (tests/test_kernels.py sweeps shapes/dtypes).  They are
+also the CPU execution path of the model substrate (``use_pallas=False``) —
+the dry-run lowers these, the TPU deployment lowers the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "mamba_scan_ref",
+    "mlstm_chunkwise_ref",
+    "mlstm_chunked_scan",
+    "gmm_ref",
+]
+
+
+# ------------------------------ attention ---------------------------------
+
+
+def _attn_mask(
+    q_pos: jnp.ndarray,  # (Sq,)
+    k_pos: jnp.ndarray,  # (Sk,)
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """Boolean mask (Sq, Sk): True = attend."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return ok
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """GQA attention with optional causal/sliding-window mask and softcap.
+
+    ``q_offset`` places the query block at absolute positions
+    ``[q_offset, q_offset + Sq)`` against keys at ``[0, Sk)`` (decode).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = _attn_mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    probs = jnp.where(jnp.any(mask, axis=-1)[None, None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ------------------------------ mamba scan ---------------------------------
+
+
+def mamba_scan_ref(
+    x: jnp.ndarray,  # (B, T, Di)
+    dt: jnp.ndarray,  # (B, T, Di)  (already softplus'd)
+    A: jnp.ndarray,  # (Di, N)     (negative; continuous-time)
+    Bmat: jnp.ndarray,  # (B, T, N)
+    Cmat: jnp.ndarray,  # (B, T, N)
+    D: jnp.ndarray,  # (Di,)
+) -> jnp.ndarray:
+    """Selective SSM scan (Mamba-1 semantics), sequential over T.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t;  y_t = C_t . h_t + D x_t
+    """
+    Bsz, T, Di = x.shape
+    N = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # (B,Di) (B,Di) (B,N) (B,N)
+        dA = jnp.exp(dt_t[..., None] * Af[None])  # (B, Di, N)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]  # (B, Di, N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    from repro.distributed.hints import hint  # lazy: avoids import cycle
+
+    h0 = hint(jnp.zeros((Bsz, Di, N), jnp.float32), "dp", "model")
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype)
+
+
+# --------------------------- mLSTM (chunkwise) ------------------------------
+
+
+def mlstm_chunkwise_ref(
+    q: jnp.ndarray,  # (B, T, H, D)
+    k: jnp.ndarray,  # (B, T, H, D)
+    v: jnp.ndarray,  # (B, T, H, D)
+    i_gate: jnp.ndarray,  # (B, T, H)  pre-activation (exponential gate)
+    f_gate: jnp.ndarray,  # (B, T, H)  pre-activation (sigmoid-ish, via logsigmoid)
+) -> jnp.ndarray:
+    """mLSTM with matrix memory and exponential gating (xLSTM paper, eq. 19-27).
+
+    Numerically-stabilized parallel (quadratic-in-T) formulation — the oracle
+    for the chunkwise Pallas kernel.  Per head:
+      F_t = cumsum(logsigmoid(f)); D_{ts} = F_t - F_s + i_s  (s <= t)
+      out_t = sum_s exp(D_ts - m_t) (q_t . k_s / sqrt(d)) v_s / denom
+      denom = max(|sum_s exp(D_ts - m_t) q.k|, exp(-m_t))
+    """
+    B, T, H, D = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) / math.sqrt(D)
+    vf = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,T,H)
+    ii = i_gate.astype(jnp.float32)
+
+    F = jnp.cumsum(lf, axis=1)  # (B,T,H)
+    # Dmat[b,h,t,s] = F_t - F_s + i_s for s<=t else -inf
+    Dmat = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]  # (B,T_t,T_s,H)? fix axes
+    Dmat = jnp.transpose(Dmat, (0, 3, 1, 2))  # (B,H,T,S)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    Dmat = jnp.where(causal[None, None], Dmat, -jnp.inf)
+    m = jnp.max(Dmat, axis=-1, keepdims=True)  # (B,H,T,1)
+    m = jnp.maximum(m, -1e30)  # rows are never fully masked (s=t allowed)
+    Dexp = jnp.exp(Dmat - m)
+
+    scores = jnp.einsum("bthd,bshd->bhts", qf, kf)  # (B,H,T,S)
+    w = scores * Dexp
+    num = jnp.einsum("bhts,bshd->bthd", w, vf)
+    den = jnp.abs(jnp.sum(w, axis=-1))  # (B,H,T)
+    den = jnp.maximum(den, jnp.exp(-m[..., 0]))
+    out = num / den.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def mlstm_chunked_scan(
+    q: jnp.ndarray,  # (B, T, H, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    i_gate: jnp.ndarray,  # (B, T, H)
+    f_gate: jnp.ndarray,  # (B, T, H)
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Chunkwise mLSTM in pure lax — O(T*L) memory (the model path).
+
+    Mathematically identical to :func:`mlstm_chunkwise_ref` (the quadratic
+    oracle) and to the Pallas kernel: per-chunk masked attention-like intra
+    term + carried (C, n, m) inter-chunk state.  ``lax.scan`` over chunks.
+    """
+    B, T, H, D = q.shape
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+    scale = 1.0 / math.sqrt(D)
+
+    # (B,T,H,*) -> (nc, B, H, L, *)
+    def rs(x, dlast):
+        x = x.reshape(B, nc, L, H, dlast) if dlast > 1 else x.reshape(B, nc, L, H)
+        return jnp.moveaxis(x, 1, 0).swapaxes(2, 3)  # (nc, B, H, L, dlast?)
+
+    qf = rs(q.astype(jnp.float32), D)
+    kf = rs(k.astype(jnp.float32) * scale, D)
+    vf = rs(v.astype(jnp.float32), D)
+    ii = rs(i_gate.astype(jnp.float32), 1)
+    lf = rs(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)), 1)
+
+    t_idx = jnp.arange(L)
+    causal = t_idx[:, None] >= t_idx[None, :]
+
+    def step(carry, xs):
+        C_p, n_p, m_p = carry  # (B,H,D,D) (B,H,D) (B,H)
+        qc, kc, vc, ic, lc = xs  # (B,H,L,D) ... (B,H,L)
+        b = jnp.cumsum(lc, axis=-1)  # (B,H,L)
+        g = b[..., -1]  # (B,H)
+        Dm = b[..., :, None] - b[..., None, :] + ic[..., None, :]  # (B,H,L,L)
+        Dm = jnp.where(causal[None, None], Dm, -1e30)
+        m_inter = b + m_p[..., None]  # (B,H,L)
+        m_comb = jnp.maximum(jnp.max(Dm, axis=-1), m_inter)
+        dexp = jnp.exp(Dm - m_comb[..., None])
+        scores = jnp.einsum("bhld,bhsd->bhls", qc, kc)
+        w = scores * dexp
+        inter_w = jnp.exp(m_inter - m_comb)  # (B,H,L)
+        num = jnp.einsum("bhls,bhsd->bhld", w, vc) + inter_w[..., None] * jnp.einsum(
+            "bhld,bhde->bhle", qc, C_p
+        )
+        den = jnp.sum(w, axis=-1) + inter_w * jnp.einsum("bhld,bhd->bhl", qc, n_p)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_comb))
+        out = num / den[..., None]  # (B,H,L,D)
+        # state update
+        key_w = g[..., None] - b + ic  # (B,H,L)
+        m_new = jnp.maximum(g + m_p, jnp.max(key_w, axis=-1))
+        kw = jnp.exp(key_w - m_new[..., None])
+        decay = jnp.exp(g + m_p - m_new)
+        C_n = decay[..., None, None] * C_p + jnp.einsum(
+            "bhld,bhle->bhde", kc * kw[..., None], vc
+        )
+        n_n = decay[..., None] * n_p + jnp.sum(kc * kw[..., None], axis=-2)
+        return (C_n, n_n, m_new), out
+
+    from repro.distributed.hints import hint  # lazy: avoids import cycle
+
+    carry0 = (
+        hint(jnp.zeros((B, H, D, D), jnp.float32), "dp"),
+        hint(jnp.zeros((B, H, D), jnp.float32), "dp"),
+        hint(jnp.full((B, H), -1e30, jnp.float32), "dp"),
+    )
+    _, outs = jax.lax.scan(step, carry0, (qf, kf, vf, ii, lf))
+    # (nc, B, H, L, D) -> (B, T, H, D)
+    out = jnp.moveaxis(outs, 0, 1).swapaxes(2, 3).reshape(B, T, H, D)
+    return out.astype(q.dtype)
+
+
+# ------------------------------ grouped matmul ------------------------------
+
+
+def gmm_ref(
+    lhs: jnp.ndarray,  # (M, K) tokens sorted by group
+    rhs: jnp.ndarray,  # (G, K, N) per-group weights
+    group_sizes: jnp.ndarray,  # (G,) int32, sum == M
+) -> jnp.ndarray:
+    """Grouped matmul: rows of ``lhs`` hit their group's ``rhs`` matrix.
+
+    Semantics of ``jax.lax.ragged_dot`` (MoE expert FFN after token sort).
+    """
+    M, K = lhs.shape
+    G, _, N = rhs.shape
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(M)
+    # group id per row
+    gid = jnp.sum(row[:, None] >= ends[None, :], axis=1)  # (M,)
+    w = rhs[gid]  # (M, K, N) gather — oracle only; kernel never materializes
+    out = jnp.einsum("mk,mkn->mn", lhs.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(lhs.dtype)

@@ -1,0 +1,3 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers,
+and the cluster-day simulation that puts the paper's scheduler in charge
+of the pod."""

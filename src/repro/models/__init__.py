@@ -1,0 +1,34 @@
+"""Model substrate: the LM-family architectures served/trained by the
+cluster layer (the paper's "jobs"), implemented as pure-functional JAX.
+
+* :mod:`repro.models.config`      — ArchConfig covering all 10 assigned archs
+* :mod:`repro.models.layers`      — norms, rope, MLPs, embeddings
+* :mod:`repro.models.attention`   — GQA full/sliding-window/cross attention
+* :mod:`repro.models.moe`         — top-k router + capacity-truncated dispatch
+* :mod:`repro.models.xlstm`       — sLSTM + mLSTM blocks
+* :mod:`repro.models.mamba`       — Mamba selective-SSM (Jamba hybrid)
+* :mod:`repro.models.transformer` — the block-pattern model builder
+"""
+
+from repro.models.config import ArchConfig, MoEConfig, MambaConfig, EncoderConfig
+from repro.models.transformer import (
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+    abstract_params,
+)
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "MambaConfig",
+    "EncoderConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "decode_step",
+    "abstract_params",
+]

@@ -1,0 +1,171 @@
+"""GQA attention block: init/apply for training (full-sequence) and decode
+(single-step against a KV cache), plus cross-attention (enc-dec).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, apply_rope, dense, dense_init, norm_init, apply_norm
+
+__all__ = [
+    "attn_init",
+    "attn_apply",
+    "attn_decode",
+    "cross_attn_init",
+    "cross_attn_apply",
+    "init_kv_cache",
+]
+
+
+def attn_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, "rmsnorm", dtype)
+        p["k_norm"] = norm_init(hd, "rmsnorm", dtype)
+    return p
+
+
+def _project_qkv(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    from repro.distributed.hints import hint
+
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = hint(dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd), "dp", None, "model", None)
+    k = hint(dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    v = hint(dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = ops.attention(
+        q, k, v, causal=causal, window=window, softcap=None, impl=impl
+    )
+    return dense(p["wo"], out.reshape(B, S, -1))
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype: jnp.dtype
+) -> Dict[str, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attn_decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],
+    position: jnp.ndarray,  # scalar int32: absolute token position (rope)
+    write_idx: jnp.ndarray,  # scalar int32: cache slot (== position, or
+    #                          position % window for ring-buffer SWA caches)
+    fill_len: jnp.ndarray,  # scalar int32: number of valid cache slots
+    *,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step: write k/v at ``write_idx``, attend over valid slots.
+
+    Sliding-window layers size their cache to the window and overwrite slots
+    modularly (ring buffer) — attention is permutation-invariant over keys and
+    rope is applied at absolute positions before the write, so no window mask
+    is needed: eviction IS the mask.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(position[None, None], (B, 1))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), write_idx, axis=1
+    )
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), write_idx, axis=1
+    )
+    # single-token attention against the cache; HBM-bandwidth-bound by design
+    out = _decode_attention(q, kc, vc, fill_len)
+    return dense(p["wo"], out.reshape(B, 1, -1)), {"k": kc, "v": vc}
+
+
+def _decode_attention(
+    q: jnp.ndarray,  # (B, 1, Hq, D)
+    k: jnp.ndarray,  # (B, L, Hkv, D)
+    v: jnp.ndarray,
+    fill_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """Single-token attention against a cache; memory-bound einsum path."""
+    B, L, Hkv, D = k.shape
+    Hq = q.shape[2]
+    g = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.astype(jnp.float32).reshape(B, 1, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    ok = jnp.arange(L) < fill_len
+    scores = jnp.where(ok[None, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ------------------------- cross attention (enc-dec) -----------------------
+
+
+def cross_attn_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attn_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, S, d) decoder states
+    enc: jnp.ndarray,  # (B, T, d) encoder output
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], enc).reshape(B, T, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], enc).reshape(B, T, cfg.n_kv_heads, hd)
+    out = ops.attention(q, k, v, causal=False, window=None, impl=impl)
+    return dense(p["wo"], out.reshape(B, S, -1))

@@ -1,0 +1,150 @@
+"""Primitive layers: norms, rotary embeddings, MLP variants, embeddings.
+
+Pure-functional: parameters are nested dicts of jnp arrays; every function
+takes (params, inputs) and returns outputs.  Initialization mirrors the
+structure so `jax.eval_shape(init, ...)` yields the abstract param tree used
+by the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Params",
+    "dense_init",
+    "dense",
+    "norm_init",
+    "apply_norm",
+    "rope_freqs",
+    "apply_rope",
+    "mlp_init",
+    "mlp_apply",
+    "embed_init",
+    "activation_fn",
+]
+
+Params = Dict[str, Any]
+
+
+def _truncated_normal(key, shape, scale, dtype):
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+def dense_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    dtype: jnp.dtype,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return _truncated_normal(key, (in_dim, out_dim), scale, dtype)
+
+
+def dense(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with fp32 accumulation on MXU."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+# ----------------------------- norms ------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype: jnp.dtype) -> Params:
+    p: Params = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    elif kind == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        return (
+            y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        ).astype(x.dtype)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+# ----------------------------- rotary ------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., seq, heads, head_dim)
+    positions: jnp.ndarray,  # (..., seq)
+    theta: float,
+) -> jnp.ndarray:
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- MLPs --------------------------------------
+
+
+def activation_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":  # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(f"not a plain activation: {name!r}")
+
+
+def mlp_init(
+    key: jax.Array, d: int, f: int, activation: str, dtype: jnp.dtype
+) -> Params:
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f, dtype),
+        "w_down": dense_init(ks[1], f, d, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "swiglu":
+        return dense(p["w_down"], jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    if activation == "geglu":
+        return dense(p["w_down"], jax.nn.gelu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    act = activation_fn(activation)
+    return dense(p["w_down"], act(dense(p["w_up"], x)))
+
+
+# ----------------------------- embeddings --------------------------------
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype: jnp.dtype) -> jnp.ndarray:
+    return _truncated_normal(key, (vocab, d), 1.0, dtype)

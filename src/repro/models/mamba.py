@@ -1,0 +1,125 @@
+"""Mamba (selective SSM) mixer layer — the Jamba hybrid's workhorse.
+
+Standard Mamba-1 block: in-proj (2x expand, gated z branch) -> causal conv4
+-> selective (input-dependent) dt/B/C -> selective scan (repro.kernels) ->
+z-gate -> out-proj.  Decode carries an O(1) (d_inner, d_state) recurrent
+state + conv window, giving Jamba its ``long_500k`` capability.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ArchConfig, MambaConfig
+from repro.models.layers import Params, apply_norm, dense, dense_init, norm_init
+from repro.models.xlstm import _causal_conv, _conv_init  # shared depthwise conv
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init"]
+
+
+def _mc(cfg: ArchConfig) -> MambaConfig:
+    return cfg.mamba or MambaConfig()
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    mc = _mc(cfg)
+    di = mc.expand * cfg.d_model
+    dtr = mc.dt_rank or max(cfg.d_model // 16, 1)
+    return di, mc.d_state, dtr
+
+
+def mamba_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    di, N, dtr = _dims(cfg)
+    mc = _mc(cfg)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),
+        "conv": _conv_init(ks[1], mc.d_conv, di, dtype),
+        "w_xdbc": dense_init(ks[2], di, dtr + 2 * N, dtype),
+        "w_dt": dense_init(ks[3], dtr, di, jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(
+                        ks[4], (di,), jnp.float32,
+                        minval=math.log(1e-3), maxval=math.log(1e-1),
+                    )
+                )
+            )
+        ),
+        "log_a": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_inputs(p: Params, cfg: ArchConfig, xc: jnp.ndarray):
+    """xc (B,T,di) -> dt (B,T,di), B (B,T,N), C (B,T,N)."""
+    di, N, dtr = _dims(cfg)
+    xdbc = dense(p["w_xdbc"], xc)
+    dt_in, Bm, Cm = jnp.split(xdbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in.astype(jnp.float32) @ p["w_dt"]) + p["dt_bias"][None, None]
+    )
+    return dt, Bm, Cm
+
+
+def mamba_apply(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, *, impl: str = "auto"
+) -> jnp.ndarray:
+    di, N, _ = _dims(cfg)
+    h = apply_norm(p["norm"], x, cfg.norm)
+    xz = dense(p["w_in"], h)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p["conv"], xin))
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["log_a"])  # (di, N)
+    y = ops.mamba_scan(
+        xc, dt.astype(xc.dtype), A, Bm, Cm, p["d_skip"], impl=impl
+    )
+    y = y * jax.nn.silu(z)
+    return x + dense(p["w_out"], y)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    di, N, _ = _dims(cfg)
+    mc = _mc(cfg)
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrent step: x (B,1,d)."""
+    B = x.shape[0]
+    di, N, _ = _dims(cfg)
+    h = apply_norm(p["norm"], x, cfg.norm)
+    xz = dense(p["w_in"], h)
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([state["conv"], xin.astype(state["conv"].dtype)], axis=1)
+    w = jnp.flip(p["conv"], axis=0)  # window[-1]=current pairs with w[0]
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    )[:, None, :].astype(x.dtype)
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc)  # (B,1,di) (B,1,N) (B,1,N)
+    A = -jnp.exp(p["log_a"])
+    dtf = dt[:, 0].astype(jnp.float32)  # (B,di)
+    dA = jnp.exp(dtf[..., None] * A[None])  # (B,di,N)
+    dBx = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h_new = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"][None] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    return x + dense(p["w_out"], y), {"h": h_new, "conv": window[:, 1:, :]}

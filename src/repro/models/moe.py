@@ -1,0 +1,125 @@
+"""Mixture-of-Experts MLP: top-k router + capacity-truncated sorted dispatch.
+
+Dispatch is sort-based (no (tokens, experts, capacity) one-hot): token copies
+are argsorted by expert id, truncated to a fixed per-expert capacity
+``C = ceil(T*k/E * capacity_factor)``, gathered to an (E, C, d) buffer,
+pushed through a batched expert matmul, and combined back with router
+weights.  FLOPs scale with *active* parameters (x capacity factor), which is
+what the roofline's MODEL_FLOPS/HLO_FLOPs ratio expects for MoE archs.
+
+Expert parallelism: the expert dimension of the (E, C, d) buffers and the
+expert weight stack is sharded over the ``model`` mesh axis (see
+repro.distributed.sharding); XLA inserts the dispatch all-to-all.
+
+On TPU the batched expert matmul lowers to the Pallas grouped-matmul kernel
+(repro.kernels.gmm); the jnp path below is its einsum equivalent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models.layers import Params, dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    assert cfg.moe is not None
+    mc = cfg.moe
+    d, fe, E = cfg.d_model, mc.d_ff_expert, mc.num_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.activation in ("swiglu", "geglu")
+    p: Params = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_up": _stack_init(ks[1], E, d, fe, dtype),
+        "w_down": _stack_init(ks[2], E, fe, d, dtype),
+    }
+    if glu:
+        p["w_gate"] = _stack_init(ks[3], E, d, fe, dtype)
+    return p
+
+
+def _stack_init(key, E, din, dout, dtype):
+    scale = 1.0 / math.sqrt(din)
+    x = jax.random.truncated_normal(key, -2.0, 2.0, (E, din, dout), jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def _expert_ffn(p: Params, xs: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Batched expert MLP: xs (E, C, d) -> (E, C, d)."""
+    up = jnp.einsum("ecd,edf->ecf", xs, p["w_up"], preferred_element_type=jnp.float32)
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum(
+            "ecd,edf->ecf", xs, p["w_gate"], preferred_element_type=jnp.float32
+        )
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    elif activation == "sq_relu":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    h = h.astype(xs.dtype)
+    return jnp.einsum(
+        "ecf,efd->ecd", h, p["w_down"], preferred_element_type=jnp.float32
+    ).astype(xs.dtype)
+
+
+def moe_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, S, d)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux load-balancing loss (scalar fp32))."""
+    mc: MoEConfig = cfg.moe  # type: ignore[assignment]
+    B, S, d = x.shape
+    T = B * S
+    E, k = mc.num_experts, mc.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- aux loss (Switch-style load balancing) -------------------------
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux = jnp.sum(me * ce) * E * mc.aux_loss_weight
+
+    # --- sorted, capacity-truncated dispatch ----------------------------
+    capacity = int(math.ceil(T * k / E * mc.capacity_factor))
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)  # stable: groups tokens by expert
+    sorted_e = flat_e[order]
+    # position of each copy within its expert group
+    pos_in_group = jnp.arange(T * k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left"
+    )
+    keep = pos_in_group < capacity
+    # slot within the (E, C) buffer; dropped copies go to a trash slot
+    slot = jnp.where(keep, sorted_e * capacity + pos_in_group, E * capacity)
+    src_token = order // k  # token index of each sorted copy
+
+    # gather tokens into expert buffers (+1 trash row, dropped at the end)
+    from repro.distributed.hints import hint
+
+    buf_idx = jnp.zeros((E * capacity + 1,), jnp.int32).at[slot].set(
+        src_token.astype(jnp.int32), mode="drop"
+    )
+    xs = jnp.take(xt, buf_idx[: E * capacity], axis=0).reshape(E, capacity, d)
+    xs = hint(xs, "model")  # EP: expert dim on the model axis (all-to-all)
+
+    ys = _expert_ffn(p, xs, cfg.activation).reshape(E * capacity, d)
+
+    # combine: route each kept copy's output back to its token, weighted
+    copy_w = top_w.reshape(-1)[order] * keep.astype(jnp.float32)  # (T*k,)
+    copy_out = jnp.take(ys, jnp.minimum(slot, E * capacity - 1), axis=0)
+    copy_out = copy_out * copy_w[:, None].astype(copy_out.dtype)
+    out = jnp.zeros((T, d), copy_out.dtype).at[src_token].add(copy_out)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,470 @@
+"""Block-pattern model builder: one code path for all 10 assigned archs.
+
+The layer stack is grouped into the architecture's repeating *pattern unit*
+(dense: [attn]; gemma3: 5x[local]+[attn]; jamba: mamba/attn/MoE interleave;
+xlstm: 7x[mLSTM]+[sLSTM]) and scanned over repeats with stacked parameters —
+compile time stays flat in depth, and the roofline extractor lowers a single
+unit (``apply_unit``) to recover per-layer costs that `lax.scan` hides from
+``cost_analysis`` (trip counts are known statically).
+
+Forward paths:
+* :func:`forward`      — full-sequence (training / prefill) -> logits, aux
+* :func:`loss_fn`      — next-token cross-entropy, sequence-chunked softmax
+* :func:`decode_step`  — one token against carried state (KV cache / SSM state)
+* :func:`init_cache`   — per-layer decode state, stacked like the params
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import (
+    attn_apply,
+    attn_decode,
+    attn_init,
+    cross_attn_apply,
+    cross_attn_init,
+    init_kv_cache,
+)
+from repro.distributed.hints import hint
+from repro.models.config import ArchConfig, LayerKind
+from repro.models.layers import (
+    Params,
+    apply_norm,
+    dense,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "decode_step",
+    "apply_unit",
+]
+
+
+def _dtype(cfg: ArchConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ============================ initialization ===============================
+
+
+def _layer_init(key: jax.Array, cfg: ArchConfig, kind: str, is_moe: bool) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
+        p["norm1"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["attn"] = attn_init(ks[0], cfg, dt)
+        if cfg.encoder is not None:
+            p["cross_norm"] = norm_init(cfg.d_model, cfg.norm, dt)
+            p["cross"] = cross_attn_init(ks[1], cfg, dt)
+    elif kind == LayerKind.MAMBA:
+        p["mixer"] = mamba_mod.mamba_init(ks[0], cfg, dt)
+    elif kind == LayerKind.MLSTM:
+        p["block"] = xlstm_mod.mlstm_block_init(ks[0], cfg, dt)
+        return p  # self-contained (no MLP)
+    elif kind == LayerKind.SLSTM:
+        p["block"] = xlstm_mod.slstm_block_init(ks[0], cfg, dt)
+        return p
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    # MLP / MoE sub-layer
+    if is_moe:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, dt)
+    elif cfg.d_ff > 0:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def _encoder_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    """Whisper-style encoder: full bidirectional attention layers."""
+    assert cfg.encoder is not None
+    dt = _dtype(cfg)
+    if cfg.encoder.n_layers == 0:  # cost-mode mini0
+        return {
+            "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+            "pos": embed_init(jax.random.fold_in(key, 999), cfg.encoder.n_frames, cfg.d_model, dt)
+            * 0.02,
+        }
+    enc_layers = []
+    for i in range(cfg.encoder.n_layers):
+        ks = jax.random.split(jax.random.fold_in(key, i), 3)
+        enc_layers.append(
+            {
+                "norm1": norm_init(cfg.d_model, cfg.norm, dt),
+                "attn": attn_init(ks[0], cfg, dt),
+                "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt),
+            }
+        )
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc_layers)
+    return {
+        "layers": stacked,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        "pos": embed_init(jax.random.fold_in(key, 999), cfg.encoder.n_frames, cfg.d_model, dt)
+        * 0.02,
+    }
+
+
+def init_params(cfg: ArchConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    dt = _dtype(cfg)
+    unit = cfg.pattern_unit()
+    repeats = cfg.num_pattern_repeats
+
+    params: Params = {
+        "embed": embed_init(jax.random.fold_in(key, 1), cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(
+            jax.random.fold_in(key, 2), cfg.vocab_size, cfg.d_model, dt
+        )
+    blocks: Params = {}
+    for u, (kind, is_moe) in enumerate(unit):
+        per_repeat = [
+            _layer_init(
+                jax.random.fold_in(key, 1000 + u * 1001 + r), cfg, kind, is_moe
+            )
+            for r in range(repeats)
+        ]
+        blocks[f"u{u}"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_repeat)
+    params["blocks"] = blocks
+    if cfg.encoder is not None:
+        params["encoder"] = _encoder_init(jax.random.fold_in(key, 3), cfg)
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct tree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, 0))
+
+
+# ============================ forward (full seq) ============================
+
+
+def apply_unit(
+    cfg: ArchConfig,
+    unit_params: Tuple[Params, ...],  # params per unit position (unstacked)
+    x: jnp.ndarray,
+    *,
+    enc_out: Optional[jnp.ndarray] = None,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One pattern unit of layers. Returns (x, aux_loss)."""
+    unit = cfg.pattern_unit()
+    aux = jnp.zeros((), jnp.float32)
+    # §Perf hillclimb 1 (confirmed): pin the residual stream to
+    # batch-sharded/replicated-d — without this GSPMD's propagation inserts
+    # "involuntary full rematerialization" all-gathers between blocks.
+    # Iteration 2 (sequence-parallel residuals, hint "dp","model",None) was
+    # REFUTED: +4.7x collective bytes — GSPMD cannot fuse the pre-matmul
+    # sequence all-gathers, so SP needs explicit shard_map collective-matmul
+    # overlap (EXPERIMENTS.md §Perf).
+    x = hint(x, "dp", None, None)
+    for (kind, is_moe), p in zip(unit, unit_params):
+        if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
+            window = cfg.sliding_window if kind == LayerKind.LOCAL_ATTN else None
+            if cfg.local_global_ratio is None and cfg.sliding_window is not None:
+                window = cfg.sliding_window  # uniformly windowed (mixtral)
+            h = apply_norm(p["norm1"], x, cfg.norm)
+            x = x + attn_apply(p["attn"], cfg, h, window=window, impl=impl)
+            if enc_out is not None and "cross" in p:
+                h = apply_norm(p["cross_norm"], x, cfg.norm)
+                x = x + cross_attn_apply(p["cross"], cfg, h, enc_out, impl=impl)
+        elif kind == LayerKind.MAMBA:
+            x = mamba_mod.mamba_apply(p["mixer"], cfg, x, impl=impl)
+        elif kind == LayerKind.MLSTM:
+            x = xlstm_mod.mlstm_block_apply(p["block"], cfg, x, impl=impl)
+            continue
+        elif kind == LayerKind.SLSTM:
+            x = xlstm_mod.slstm_block_apply(p["block"], cfg, x)
+            continue
+        if is_moe:
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            mo, a = moe_mod.moe_apply(p["moe"], cfg, h)
+            x = x + mo
+            aux = aux + a
+        elif cfg.d_ff > 0 and "mlp" in p:
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            x = x + mlp_apply(p["mlp"], h, cfg.activation)
+        x = hint(x, "dp", None, None)
+    return x, aux
+
+
+def _run_blocks(
+    cfg: ArchConfig,
+    blocks: Params,
+    x: jnp.ndarray,
+    enc_out: Optional[jnp.ndarray],
+    impl: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    unit_len = len(cfg.pattern_unit())
+    if unit_len == 0:  # cost-mode mini0
+        return x, jnp.zeros((), jnp.float32)
+    stacked = tuple(blocks[f"u{u}"] for u in range(unit_len))
+
+    def body(carry, unit_slice):
+        h, aux = carry
+        h, a = apply_unit(cfg, unit_slice, h, enc_out=enc_out, impl=impl)
+        return (h, aux + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers and cfg.num_pattern_repeats > 1:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), stacked
+        )
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for r in range(cfg.num_pattern_repeats):
+            unit_slice = jax.tree_util.tree_map(lambda a_: a_[r], stacked)
+            (x, aux), _ = body((x, aux), unit_slice)
+    return x, aux
+
+
+def _run_encoder(cfg: ArchConfig, params: Params, frames: jnp.ndarray, impl: str) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    enc = params["encoder"]
+    x = frames + enc["pos"][None, : frames.shape[1], :].astype(frames.dtype)
+    if "layers" not in enc:  # cost-mode mini0
+        return apply_norm(enc["final_norm"], x, cfg.norm)
+
+    def body(h, lp):
+        a = apply_norm(lp["norm1"], h, cfg.norm)
+        h = h + attn_apply(lp["attn"], cfg, a, causal=False, impl=impl)
+        a = apply_norm(lp["norm2"], h, cfg.norm)
+        h = h + mlp_apply(lp["mlp"], a, cfg.activation)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux losses)."""
+    tokens = batch["tokens"]
+    dt = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+
+    if cfg.vision_tokens > 0 and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(dt), x], axis=1)
+
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _run_encoder(cfg, params, batch["enc_frames"].astype(dt), impl)
+
+    x, aux = _run_blocks(cfg, params["blocks"], x, enc_out, impl)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+
+    if cfg.vision_tokens > 0 and "img_embeds" in batch:
+        x = x[:, batch["img_embeds"].shape[1] :, :]
+
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x, unembed, preferred_element_type=jnp.float32
+    )
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    impl: str = "auto",
+    loss_chunk: int = 512,
+) -> jnp.ndarray:
+    """Next-token cross-entropy; softmax computed in sequence chunks so the
+    (B, S, V) logits for 256k vocabularies never materialize at once."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    dt = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.vision_tokens > 0 and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(dt), x], axis=1)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _run_encoder(cfg, params, batch["enc_frames"].astype(dt), impl)
+    x, aux = _run_blocks(cfg, params["blocks"], x, enc_out, impl)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.vision_tokens > 0 and "img_embeds" in batch:
+        x = x[:, batch["img_embeds"].shape[1] :, :]
+
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    B, S, d = x.shape
+    chunk = min(loss_chunk, S)
+    n_chunks = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+
+    def chunk_loss(args):
+        xc, yc = args  # (B, chunk, d), (B, chunk)
+        logits = jnp.einsum(
+            "bsd,vd->bsv", xc, unembed, preferred_element_type=jnp.float32
+        )
+        if cfg.logit_softcap is not None:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    xs = x.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    ys = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    total = jnp.sum(jax.lax.map(chunk_loss, (xs, ys)))
+    return total / (B * S) + aux
+
+
+# ============================== decode =====================================
+
+
+def _layer_state_init(
+    cfg: ArchConfig, kind: str, batch: int, max_len: int, dt
+) -> Params:
+    if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
+        # sliding-window layers only ever need `window` cache slots
+        if kind == LayerKind.LOCAL_ATTN and cfg.sliding_window is not None:
+            L = min(max_len, cfg.sliding_window)
+        elif cfg.local_global_ratio is None and cfg.sliding_window is not None:
+            L = min(max_len, cfg.sliding_window)
+        else:
+            L = max_len
+        return init_kv_cache(cfg, batch, L, dt)
+    if kind == LayerKind.MAMBA:
+        return mamba_mod.mamba_state_init(cfg, batch, dt)
+    if kind == LayerKind.MLSTM:
+        return xlstm_mod.mlstm_state_init(cfg, batch, dt)
+    if kind == LayerKind.SLSTM:
+        return xlstm_mod.slstm_state_init(cfg, batch, dt)
+    raise ValueError(kind)  # pragma: no cover
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int
+) -> Params:
+    """Decode state stacked per unit position (mirrors the param layout)."""
+    dt = _dtype(cfg)
+    unit = cfg.pattern_unit()
+    repeats = cfg.num_pattern_repeats
+    cache: Params = {}
+    for u, (kind, _) in enumerate(unit):
+        per_repeat = [
+            _layer_state_init(cfg, kind, batch, max_len, dt) for _ in range(repeats)
+        ]
+        cache[f"u{u}"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_repeat)
+    return cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    cache: Params,
+    token: jnp.ndarray,  # (B, 1) int32
+    index: jnp.ndarray,  # scalar int32 current position
+    *,
+    enc_out: Optional[jnp.ndarray] = None,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Params]:
+    """One decode step; returns (logits (B, 1, V), new cache)."""
+    dt = _dtype(cfg)
+    unit = cfg.pattern_unit()
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+
+    unit_len = len(unit)
+    if unit_len == 0:  # cost-mode mini0
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("bsd,vd->bsv", x, unembed, preferred_element_type=jnp.float32)
+        return logits, {}
+    stacked_params = tuple(params["blocks"][f"u{u}"] for u in range(unit_len))
+    stacked_cache = tuple(cache[f"u{u}"] for u in range(unit_len))
+
+    def body(x, slices):
+        p_slices, c_slices = slices
+        new_states = []
+        for (kind, is_moe), p, st in zip(unit, p_slices, c_slices):
+            if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
+                window = None
+                if kind == LayerKind.LOCAL_ATTN and cfg.sliding_window is not None:
+                    window = cfg.sliding_window
+                elif cfg.local_global_ratio is None and cfg.sliding_window is not None:
+                    window = cfg.sliding_window
+                h = apply_norm(p["norm1"], x, cfg.norm)
+                L = st["k"].shape[1]
+                is_ring = window is not None and L == window
+                write_idx = index % L if is_ring else jnp.minimum(index, L - 1)
+                fill_len = jnp.minimum(index + 1, L)
+                a, st = attn_decode(
+                    p["attn"], cfg, h, st, index, write_idx, fill_len, impl=impl
+                )
+                x = x + a
+                if enc_out is not None and "cross" in p:
+                    h = apply_norm(p["cross_norm"], x, cfg.norm)
+                    x = x + cross_attn_apply(p["cross"], cfg, h, enc_out, impl=impl)
+            elif kind == LayerKind.MAMBA:
+                x, st = mamba_mod.mamba_decode(p["mixer"], cfg, x, st)
+            elif kind == LayerKind.MLSTM:
+                x, st = xlstm_mod.mlstm_block_decode(p["block"], cfg, x, st)
+                new_states.append(st)
+                continue
+            elif kind == LayerKind.SLSTM:
+                x, st = xlstm_mod.slstm_block_decode(p["block"], cfg, x, st)
+                new_states.append(st)
+                continue
+            if is_moe:
+                h = apply_norm(p["norm2"], x, cfg.norm)
+                mo, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+                x = x + mo
+            elif cfg.d_ff > 0 and "mlp" in p:
+                h = apply_norm(p["norm2"], x, cfg.norm)
+                x = x + mlp_apply(p["mlp"], h, cfg.activation)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    if cfg.scan_layers and cfg.num_pattern_repeats > 1:
+        x, new_cache = jax.lax.scan(body, x, (stacked_params, stacked_cache))
+    else:
+        outs = []
+        for r in range(cfg.num_pattern_repeats):
+            sl = jax.tree_util.tree_map(lambda a: a[r], (stacked_params, stacked_cache))
+            x, ns = body(x, sl)
+            outs.append(ns)
+        new_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    out_cache = {f"u{u}": new_cache[u] for u in range(unit_len)}
+    return logits, out_cache

@@ -1,0 +1,302 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows the xLSTM paper's residual block structure:
+
+* mLSTM block: LN -> up-proj (2x expansion, gated z branch) -> causal conv4 ->
+  q/k from conv path, v from pre-conv path -> per-head scalar i/f gates ->
+  chunkwise mLSTM (repro.kernels) -> z-gate -> down-proj.
+* sLSTM block: LN -> causal conv4 -> 4-head sLSTM with exponential gating and
+  block-diagonal recurrence -> group norm -> down-proj; followed by a 4/3
+  GeLU FFN sub-block.
+
+For decode, both carry O(1) recurrent state (matrix / scalar memories), which
+is what makes xlstm-350m a ``long_500k``-capable architecture.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, apply_norm, dense, dense_init, norm_init
+
+__all__ = [
+    "mlstm_block_init",
+    "mlstm_block_apply",
+    "mlstm_block_decode",
+    "mlstm_state_init",
+    "slstm_block_init",
+    "slstm_block_apply",
+    "slstm_block_decode",
+    "slstm_state_init",
+]
+
+EXPAND = 2  # mLSTM projection expansion factor
+CONV = 4  # causal conv width
+
+
+def _conv_init(key, width, channels, dtype):
+    scale = 1.0 / math.sqrt(width)
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, (width, channels), jnp.float32)
+        * scale
+    ).astype(dtype)
+
+
+def _causal_conv(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,T,C), w (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W=4: unrolled taps
+        out = out + xp[:, i : i + x.shape[1], :] * w[W - 1 - i][None, None, :]
+    return out
+
+
+# ------------------------------ mLSTM block --------------------------------
+
+
+def mlstm_block_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    di = EXPAND * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv": _conv_init(ks[1], CONV, di, dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_i": dense_init(ks[5], di, H, jnp.float32),
+        "w_f": dense_init(ks[6], di, H, jnp.float32),
+        "w_down": dense_init(ks[7], di, d, dtype),
+        "out_norm": norm_init(di, "rmsnorm", dtype),
+    }
+
+
+def _mlstm_qkvif(p: Params, cfg: ArchConfig, x: jnp.ndarray):
+    B, T, _ = x.shape
+    di = EXPAND * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    h = apply_norm(p["norm"], x, cfg.norm)
+    up = dense(p["w_up"], h)
+    xin, z = jnp.split(up, 2, axis=-1)  # (B,T,di) each
+    xc = jax.nn.silu(_causal_conv(p["conv"], xin))
+    q = dense(p["wq"], xc).reshape(B, T, H, dh)
+    k = dense(p["wk"], xc).reshape(B, T, H, dh)
+    v = dense(p["wv"], xin).reshape(B, T, H, dh)
+    ig = (xc.astype(jnp.float32) @ p["w_i"]).astype(jnp.float32)  # (B,T,H)
+    fg = (xc.astype(jnp.float32) @ p["w_f"]).astype(jnp.float32)
+    return q, k, v, ig, fg, z, xin
+
+
+def mlstm_block_apply(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, *, impl: str = "auto"
+) -> jnp.ndarray:
+    B, T, _ = x.shape
+    di = EXPAND * cfg.d_model
+    q, k, v, ig, fg, z, _ = _mlstm_qkvif(p, cfg, x)
+    h = ops.mlstm(q, k, v, ig, fg, impl=impl)  # (B,T,H,dh)
+    h = h.reshape(B, T, di)
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    h = h * jax.nn.silu(z)
+    return x + dense(p["w_down"], h)
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    di = EXPAND * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, CONV - 1, di), dtype),
+    }
+
+
+def mlstm_block_decode(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrent step (B, 1, d)."""
+    B = x.shape[0]
+    di = EXPAND * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    h = apply_norm(p["norm"], x, cfg.norm)
+    up = dense(p["w_up"], h)
+    xin, z = jnp.split(up, 2, axis=-1)  # (B,1,di)
+    # conv over the carried window; taps flipped: window[-1] is the CURRENT
+    # token and must pair with w[0] (matches _causal_conv's orientation)
+    window = jnp.concatenate([state["conv"], xin.astype(state["conv"].dtype)], axis=1)
+    w = jnp.flip(p["conv"], axis=0)
+    xc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    xc = jax.nn.silu(xc)[:, None, :].astype(x.dtype)  # (B,1,di)
+    q = dense(p["wq"], xc).reshape(B, H, dh)
+    k = dense(p["wk"], xc).reshape(B, H, dh) / math.sqrt(dh)
+    v = dense(p["wv"], xin).reshape(B, H, dh)
+    ig = (xc.reshape(B, di).astype(jnp.float32) @ p["w_i"])  # (B,H)
+    fg = (xc.reshape(B, di).astype(jnp.float32) @ p["w_f"])
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + state["m"], ig)
+    i_w = jnp.exp(ig - m_new)[..., None]  # (B,H,1)
+    decay = jnp.exp(lf + state["m"] - m_new)[..., None]
+    C = decay[..., None] * state["C"] + (i_w[..., None] * k[..., :, None] * v[..., None, :])
+    n = decay * state["n"] + i_w[..., 0][..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    hout = (num / den).reshape(B, 1, di).astype(x.dtype)
+    hout = apply_norm(p["out_norm"], hout, "rmsnorm")
+    hout = hout * jax.nn.silu(z)
+    new_state = {
+        "C": C,
+        "n": n,
+        "m": m_new,
+        "conv": window[:, 1:, :],
+    }
+    return x + dense(p["w_down"], hout), new_state
+
+
+# ------------------------------ sLSTM block --------------------------------
+
+
+def slstm_block_init(key: jax.Array, cfg: ArchConfig, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    f = int(d * 4 / 3)
+    ks = jax.random.split(key, 10)
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "conv": _conv_init(ks[0], CONV, d, dtype),
+        "w_i": dense_init(ks[1], d, d, dtype),
+        "w_f": dense_init(ks[2], d, d, dtype),
+        "w_z": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype),
+        "r_i": _stack_r(ks[5], H, dh, dtype),
+        "r_f": _stack_r(ks[6], H, dh, dtype),
+        "r_z": _stack_r(ks[7], H, dh, dtype),
+        "r_o": _stack_r(ks[8], H, dh, dtype),
+        "gn": norm_init(d, "rmsnorm", dtype),
+        "ffn_norm": norm_init(d, cfg.norm, dtype),
+        "w_ffn_up": dense_init(ks[9], d, f, dtype),
+        "w_ffn_down": dense_init(jax.random.fold_in(ks[9], 1), f, d, dtype),
+    }
+
+
+def _stack_r(key, H, dh, dtype):
+    scale = 1.0 / math.sqrt(dh)
+    x = jax.random.truncated_normal(key, -2.0, 2.0, (H, dh, dh), jnp.float32) * scale
+    return x.astype(dtype)
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, CONV - 1, d), dtype),
+    }
+
+
+def _slstm_step(p: Params, cfg: ArchConfig, carry, gates):
+    """One sLSTM time step. gates: precomputed input projections (B, 4d)."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, m, h_prev = carry
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)  # (B,d) each
+    hb = h_prev.reshape(-1, H, dh)
+
+    def rec(r):
+        return jnp.einsum("bhd,hde->bhe", hb, r.astype(jnp.float32)).reshape(-1, d)
+
+    gi = gi + rec(p["r_i"])
+    gf = gf + rec(p["r_f"])
+    gz = gz + rec(p["r_z"])
+    go = go + rec(p["r_o"])
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    i_w = jnp.exp(gi - m_new)
+    f_w = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f_w * c + i_w * z
+    n_new = jnp.maximum(f_w * n + i_w, 1e-6)
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, T, d = x.shape
+    h = apply_norm(p["norm"], x, cfg.norm)
+    xc = jax.nn.silu(_causal_conv(p["conv"], h))
+    # input projections for all gates, all timesteps at once (MXU work)
+    gates = jnp.concatenate(
+        [
+            dense(p["w_i"], xc),
+            dense(p["w_f"], xc),
+            dense(p["w_z"], h),
+            dense(p["w_o"], h),
+        ],
+        axis=-1,
+    ).astype(jnp.float32)  # (B,T,4d)
+    from repro.distributed.hints import hint
+
+    carry = (
+        hint(jnp.zeros((B, d), jnp.float32), "dp"),
+        hint(jnp.ones((B, d), jnp.float32), "dp"),
+        hint(jnp.zeros((B, d), jnp.float32), "dp"),
+        hint(jnp.zeros((B, d), jnp.float32), "dp"),
+    )
+    (c, n, m, hT), hs = jax.lax.scan(
+        lambda cr, g: _slstm_step(p, cfg, cr, g), carry, jnp.moveaxis(gates, 1, 0)
+    )
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,T,d)
+    out = x + _slstm_out(p, cfg, hs)
+    # FFN sub-block
+    hf = apply_norm(p["ffn_norm"], out, cfg.norm)
+    return out + dense(p["w_ffn_down"], jax.nn.gelu(dense(p["w_ffn_up"], hf)))
+
+
+def _slstm_out(p: Params, cfg: ArchConfig, hs: jnp.ndarray) -> jnp.ndarray:
+    return apply_norm(p["gn"], hs, "rmsnorm")
+
+
+def slstm_block_decode(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B = x.shape[0]
+    d = cfg.d_model
+    h = apply_norm(p["norm"], x, cfg.norm)  # (B,1,d)
+    window = jnp.concatenate([state["conv"], h.astype(state["conv"].dtype)], axis=1)
+    w = jnp.flip(p["conv"], axis=0)  # window[-1]=current pairs with w[0]
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    )[:, None, :].astype(x.dtype)
+    gates = jnp.concatenate(
+        [
+            dense(p["w_i"], xc),
+            dense(p["w_f"], xc),
+            dense(p["w_z"], h),
+            dense(p["w_o"], h),
+        ],
+        axis=-1,
+    ).astype(jnp.float32)[:, 0]  # (B,4d)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, hnew), _ = _slstm_step(p, cfg, carry, gates)
+    hs = _slstm_out(p, cfg, hnew[:, None, :].astype(x.dtype))
+    out = x + hs
+    hf = apply_norm(p["ffn_norm"], out, cfg.norm)
+    out = out + dense(p["w_ffn_down"], jax.nn.gelu(dense(p["w_ffn_up"], hf)))
+    return out, {"c": c, "n": n, "m": m, "h": hnew, "conv": window[:, 1:, :]}

@@ -1,0 +1,12 @@
+"""Optimizer substrate (no external deps): AdamW + schedules + clipping."""
+
+from repro.optim.adamw import AdamW, AdamWConfig, OptState
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamW",
+    "AdamWConfig",
+    "OptState",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,102 @@
+"""AdamW on parameter pytrees.
+
+Production knobs for the large assigned archs:
+* ``state_dtype="bfloat16"`` halves optimizer memory (m, v in bf16) — used by
+  nemotron-4-340b to fit a v5e's 16 GB HBM (see EXPERIMENTS.md §Dry-run),
+* global-norm gradient clipping,
+* decoupled weight decay, schedule passed as a function of step.
+
+Optimizer state inherits each parameter's sharding (same tree structure), so
+FSDP/TP shards m and v alongside the weights — ZeRO-style by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "AdamW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Any = 3e-4  # float or Callable[step] -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None  # None = match param dtype promoted fp32
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig) -> None:
+        self.cfg = cfg
+
+    def _state_dtype(self, leaf: jnp.ndarray) -> jnp.dtype:
+        if self.cfg.state_dtype is not None:
+            return jnp.dtype(self.cfg.state_dtype)
+        return jnp.float32
+
+    def init(self, params: Any) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, self._state_dtype(p))
+        return OptState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        if callable(self.cfg.lr):
+            return self.cfg.lr(step)
+        return jnp.asarray(self.cfg.lr, jnp.float32)
+
+    def update(self, grads: Any, state: OptState, params: Any):
+        cfg = self.cfg
+        step = state.step + 1
+
+        if cfg.grad_clip_norm is not None:
+            leaves = jax.tree_util.tree_leaves(grads)
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+            )
+            scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale), grads
+            )
+        else:
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+        bc1 = 1.0 - cfg.b1**step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2**step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            mf = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+            vf = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay > 0.0 and p.ndim >= 2:  # no decay on norms/bias
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (
+                new_p.astype(p.dtype),
+                mf.astype(m.dtype),
+                vf.astype(v.dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(m=new_m, v=new_v, step=step)

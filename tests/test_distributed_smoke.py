@@ -1,0 +1,42 @@
+"""Distributed machinery on 8 fake devices (subprocess: needs XLA_FLAGS
+before jax init, while the rest of the suite must keep 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers", "sharded_smoke.py")
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.slow
+def test_sharded_train_serve_and_elastic_restore():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, HELPER],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "SHARDED_SMOKE_OK" in proc.stdout
+
+
+def test_param_spec_rules_are_complete():
+    """Every leaf of every smoke arch resolves to a valid PartitionSpec."""
+    import jax
+    from repro.configs import ARCH_IDS, smoke_config
+    from repro.distributed.sharding import param_spec
+    from repro.models import abstract_params
+
+    for name in ARCH_IDS:
+        cfg = smoke_config(name)
+        abs_params = abstract_params(cfg)
+        for path, leaf in jax.tree_util.tree_leaves_with_path(abs_params):
+            spec = param_spec(path, leaf)
+            assert len(spec) <= leaf.ndim, (name, path, spec, leaf.shape)

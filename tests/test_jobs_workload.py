@@ -1,0 +1,104 @@
+"""Job elasticity + §V-A workload generation (unit + hypothesis)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import (
+    SUBLINEAR_CURVES,
+    ElasticityClass,
+    Job,
+    JobKind,
+    LINEAR,
+    capped,
+)
+from repro.core.workload import DIURNAL_RATE_PER_MIN, WorkloadSpec, arrival_rate, generate_jobs
+
+
+def test_linear_elasticity():
+    for k in (1, 2, 3, 4, 7):
+        assert LINEAR.throughput(k) == k
+
+
+def test_capped_elasticity():
+    e = capped(3)
+    assert e.throughput(1) == 1
+    assert e.throughput(3) == 3
+    assert e.throughput(7) == 3
+    with pytest.raises(ValueError):
+        capped(5)
+
+
+@given(st.sampled_from(list(SUBLINEAR_CURVES)), st.floats(1.0, 7.0), st.floats(1.0, 7.0))
+@settings(max_examples=60, deadline=None)
+def test_sublinear_properties(label, k1, k2):
+    e = SUBLINEAR_CURVES[label]
+    assert e.throughput(1.0) == pytest.approx(1.0, abs=1e-9)
+    lo, hi = min(k1, k2), max(k1, k2)
+    # monotone nondecreasing, but never superlinear
+    assert e.throughput(hi) >= e.throughput(lo) - 1e-9
+    assert e.throughput(hi) <= hi + 1e-9
+
+
+def test_job_duration_and_deadline_math():
+    j = Job(0, JobKind.TRAINING, arrival=0.0, work=12.0, deadline=10.0, elasticity=LINEAR)
+    assert j.duration_on(4) == pytest.approx(3.0)
+    assert j.meets_deadline_on(t=0.0, slots=4)
+    assert not j.meets_deadline_on(t=8.0, slots=4)
+    j.remaining = 6.0
+    assert j.duration_on(2) == pytest.approx(3.0)
+
+
+def test_no_mig_speedup_applies_to_linear_only():
+    spec = WorkloadSpec()
+    jobs = generate_jobs(spec, seed=1)
+    for j in jobs:
+        if j.elasticity is LINEAR:
+            assert j.speedup_no_mig == pytest.approx(1.06)
+            assert j.rate_on(7, mig_enabled=False) == pytest.approx(7 * 1.06)
+        else:
+            assert j.speedup_no_mig == 1.0
+
+
+def test_diurnal_rate_peaks_and_troughs():
+    # Fig. 5: peak plateau 5:00-17:00, overnight trough
+    assert arrival_rate(11 * 60.0) > 0.5
+    assert arrival_rate(2 * 60.0) <= 0.12
+    assert max(DIURNAL_RATE_PER_MIN) <= 0.6
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_workload_determinism_and_validity(seed):
+    spec = WorkloadSpec(horizon_min=240.0)
+    a = generate_jobs(spec, seed=seed)
+    b = generate_jobs(spec, seed=seed)
+    assert len(a) == len(b)
+    for ja, jb in zip(a, b):
+        assert ja.arrival == jb.arrival and ja.work == jb.work
+        assert ja.deadline > ja.arrival
+        assert ja.work > 0
+        assert 0.0 <= ja.arrival < 240.0
+
+
+def test_inference_training_split():
+    spec = WorkloadSpec(horizon_min=24 * 60.0, inference_split=0.8)
+    jobs = generate_jobs(spec, seed=3)
+    inf = sum(1 for j in jobs if j.kind == JobKind.INFERENCE)
+    assert 0.7 < inf / len(jobs) < 0.9
+    # training durations in U(10, 40)
+    for j in jobs:
+        if j.kind == JobKind.TRAINING:
+            assert 10.0 <= j.work <= 40.0
+
+
+def test_elasticity_class_mix():
+    jobs = generate_jobs(WorkloadSpec(horizon_min=24 * 60.0), seed=5)
+    frac = {
+        k: sum(1 for j in jobs if j.elasticity.klass == k) / len(jobs)
+        for k in ElasticityClass
+    }
+    for k, f in frac.items():
+        assert 0.2 < f < 0.47, (k, f)  # ~1/3 each (§V-A)

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm import gmm
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.mlstm import mlstm_chunkwise
+from repro.kernels.ref import (
+    attention_ref,
+    gmm_ref,
+    mamba_scan_ref,
+    mlstm_chunked_scan,
+    mlstm_chunkwise_ref,
+)
+
+rng = np.random.default_rng(0)
+
+
+def t(*s, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=s) * scale, dtype)
+
+
+# ------------------------------ attention ----------------------------------
+
+ATTN_CASES = [
+    # B, Sq, Sk, Hq, Hkv, D, causal, window, softcap, off, dtype
+    (2, 256, 256, 4, 2, 64, True, None, None, 0, jnp.float32),
+    (1, 128, 128, 8, 8, 128, True, None, None, 0, jnp.float32),
+    (1, 256, 256, 4, 1, 64, True, 128, None, 0, jnp.float32),
+    (2, 128, 128, 4, 2, 64, False, None, 50.0, 0, jnp.float32),
+    (1, 128, 384, 4, 2, 64, True, None, None, 256, jnp.float32),
+    (1, 256, 256, 2, 2, 64, True, None, None, 0, jnp.bfloat16),
+    (1, 128, 128, 4, 4, 256, True, 64, None, 0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, win, cap, off, dtype = case
+    q, k, v = t(B, Sq, Hq, D, dtype=dtype), t(B, Sk, Hkv, D, dtype=dtype), t(B, Sk, Hkv, D, dtype=dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=win, softcap=cap, q_offset=off, interpret=True
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=win, softcap=cap, q_offset=off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_shapes():
+    q, k, v = t(1, 512, 2, 64), t(1, 512, 2, 64), t(1, 512, 2, 64)
+    ref = attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 128), (128, 64), (256, 256)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------ mamba scan ----------------------------------
+
+MAMBA_CASES = [
+    (2, 128, 256, 16, 128, 64, jnp.float32),
+    (1, 256, 512, 16, 256, 128, jnp.float32),
+    (2, 64, 128, 8, 128, 64, jnp.float32),
+    (1, 128, 256, 16, 128, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES)
+def test_mamba_scan_matches_oracle(case):
+    B, T, Di, N, bDi, ch, dtype = case
+    x = t(B, T, Di, dtype=dtype)
+    dt = jax.nn.softplus(t(B, T, Di)) * 0.1
+    A = -jnp.exp(t(Di, N) * 0.5)
+    Bm, Cm, D = t(B, T, N), t(B, T, N), t(Di)
+    out = mamba_scan(
+        x, dt.astype(dtype), A, Bm, Cm, D, block_channels=bDi, chunk=ch, interpret=True
+    )
+    ref = mamba_scan_ref(x, dt.astype(dtype), A, Bm, Cm, D)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ------------------------------ mLSTM ---------------------------------------
+
+MLSTM_CASES = [
+    (2, 128, 2, 64, 64),
+    (1, 256, 4, 64, 128),
+    (1, 128, 1, 128, 32),
+]
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES)
+def test_mlstm_kernel_matches_oracle(case):
+    B, T, H, D, L = case
+    q, k, v = t(B, T, H, D), t(B, T, H, D), t(B, T, H, D)
+    ig, fg = t(B, T, H), t(B, T, H, scale=2.0) + 2.0
+    out = mlstm_chunkwise(q, k, v, ig, fg, chunk=L, interpret=True)
+    ref = mlstm_chunkwise_ref(q, k, v, ig, fg)
+    rel = np.max(np.abs(np.asarray(out) - np.asarray(ref)) / (np.abs(np.asarray(ref)) + 1e-2))
+    assert rel < 2e-3, rel
+
+
+@pytest.mark.parametrize("L", [32, 64, 128])
+def test_mlstm_chunked_scan_matches_quadratic(L):
+    B, T, H, D = 1, 128, 2, 32
+    q, k, v = t(B, T, H, D), t(B, T, H, D), t(B, T, H, D)
+    ig, fg = t(B, T, H), t(B, T, H, scale=2.0) + 2.0
+    a = mlstm_chunkwise_ref(q, k, v, ig, fg)
+    b = mlstm_chunked_scan(q, k, v, ig, fg, chunk=L)
+    rel = np.max(np.abs(np.asarray(a) - np.asarray(b)) / (np.abs(np.asarray(a)) + 1e-2))
+    assert rel < 2e-3, rel
+
+
+# ------------------------------ gmm -----------------------------------------
+
+
+@pytest.mark.parametrize(
+    "G,rows,K,N,bm",
+    [(4, 256, 256, 128, 128), (8, 128, 512, 256, 128), (2, 128, 128, 128, 64)],
+)
+def test_gmm_matches_oracle(G, rows, K, N, bm):
+    M = G * rows
+    lhs, rhs = t(M, K), t(G, K, N)
+    sizes = jnp.full((G,), rows, jnp.int32)
+    gids = jnp.repeat(jnp.arange(G, dtype=jnp.int32), rows // bm)
+    out = gmm(lhs, rhs, gids, block_m=bm, interpret=True)
+    ref = gmm_ref(lhs, rhs, sizes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3, rtol=1e-3)
+
+
+def test_gmm_uneven_groups():
+    G, K, N, bm = 3, 256, 128, 128
+    sizes = jnp.array([256, 128, 384], jnp.int32)
+    M = int(sizes.sum())
+    lhs, rhs = t(M, K), t(G, K, N)
+    gids = jnp.asarray(np.repeat(np.arange(G), np.asarray(sizes) // bm), jnp.int32)
+    out = gmm(lhs, rhs, gids, block_m=bm, interpret=True)
+    ref = gmm_ref(lhs, rhs, sizes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3, rtol=1e-3)

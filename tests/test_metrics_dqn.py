@@ -1,0 +1,110 @@
+"""ET metric + DQN machinery."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import SimResult, et_metric, et_scale_factor, et_table
+from repro.core.rl.dqn import DQNConfig, DQNLearner, ReplayBuffer
+from repro.core.rl.env import FEATURE_DIM, RewardWeights, state_features
+from repro.core.rl.agent import DQNAgent
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import MIGSimulator
+from repro.core.workload import WorkloadSpec, generate_jobs
+
+
+def _res(e, t):
+    return SimResult(energy_wh=e, avg_tardiness=t)
+
+
+def test_et_scale_factor_definition():
+    rs = [_res(100.0, 2.0), _res(300.0, 4.0)]
+    # s = 200, t = 3 -> a = 3 / 400
+    assert et_scale_factor(rs) == pytest.approx(3.0 / 400.0)
+
+
+def test_et_metric_formula():
+    a = 0.5
+    rs = [_res(10.0, 2.0)]
+    assert et_metric(rs, a) == pytest.approx((0.5 * 10 + 2) / 1.5)
+
+
+def test_et_table_shared_a_and_ordering():
+    per = {
+        "good": [_res(100.0, 1.0)] * 3,
+        "bad": [_res(200.0, 5.0)] * 3,
+    }
+    table, a = et_table(per)
+    assert table["good"] < table["bad"]
+    assert a == pytest.approx(3.0 / (2 * 150.0))
+
+
+@given(st.lists(st.tuples(st.floats(1, 1e4), st.floats(0, 1e3)), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_et_nonnegative_and_monotone(pairs):
+    rs = [_res(e, t) for e, t in pairs]
+    a = et_scale_factor(rs)
+    assert a >= 0
+    v = et_metric(rs, a)
+    assert v >= 0
+    # adding tardiness can only increase ET
+    rs2 = [_res(e, t + 1.0) for e, t in pairs]
+    assert et_metric(rs2, a) > v
+
+
+def test_replay_buffer_wraps():
+    rb = ReplayBuffer(8, 3)
+    for i in range(20):
+        rb.add(np.full(3, i, np.float32), i % 4, float(i), np.zeros(3, np.float32), False, 0.99)
+    assert rb.size == 8
+    s, a, r, s2, d, g = rb.sample(np.random.default_rng(0), 16)
+    assert s.shape == (16, 3) and r.min() >= 12.0  # only recent entries remain
+
+
+def test_dqn_learns_trivial_contextual_bandit():
+    """Q-learning sanity: reward = 1 if action == argmax(state) else 0."""
+    cfg = DQNConfig(state_dim=4, num_actions=4, hidden=(32, 32), lr=3e-3,
+                    min_buffer=64, batch_size=64, target_sync_every=100,
+                    gamma=0.0, seed=0)
+    learner = DQNLearner(cfg)
+    rng = np.random.default_rng(0)
+    for step in range(1500):
+        s = rng.random(4).astype(np.float32)
+        a = int(rng.integers(0, 4))
+        r = 1.0 if a == int(np.argmax(s)) else 0.0
+        learner.observe(s, a, r, np.zeros(4, np.float32), True, 0.0)
+        learner.maybe_train(1)
+    correct = 0
+    for _ in range(200):
+        s = rng.random(4).astype(np.float32)
+        correct += int(learner.greedy_action(s) == int(np.argmax(s)))
+    assert correct > 160, correct
+
+
+def test_state_features_shape_and_bounds():
+    sim = MIGSimulator(make_scheduler("EDF-SS"))
+    jobs = generate_jobs(WorkloadSpec(horizon_min=60.0, constant_rate=0.5), seed=0)
+    sim.run(jobs)
+    f = state_features(30.0, sim)
+    assert f.shape == (FEATURE_DIM,)
+    assert np.all(f >= 0.0) and np.all(f <= 1.0)
+
+
+def test_agent_collects_transitions_and_penalizes_switch():
+    cfg = DQNConfig(state_dim=FEATURE_DIM, min_buffer=10_000)  # no training
+    learner = DQNLearner(cfg)
+    agent = DQNAgent(learner, train=True)
+    agent.begin_episode(epsilon=1.0)
+    sim = MIGSimulator(make_scheduler("EDF-SS"))
+    jobs = generate_jobs(WorkloadSpec(horizon_min=120.0, constant_rate=0.3), seed=1)
+    res = sim.run(jobs, policy=agent)
+    agent.end_episode(sim)
+    assert learner.buffer.size > 10  # n-step transitions recorded
+    assert res.repartitions > 0  # epsilon=1: plenty of random switches
+    assert agent.episode_reward < 0  # energy+tardiness costs accrue
+
+
+def test_reward_weights_switch_penalty_positive():
+    rw = RewardWeights()
+    assert rw.switch_penalty(5) > 0
+    assert rw.interval_reward(100.0, 10.0) < 0

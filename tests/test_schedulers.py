@@ -1,0 +1,133 @@
+"""Scheduler invariants (unit + hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import Job, JobKind, LINEAR, capped, sublinear
+from repro.core.schedulers import SCHEDULERS, make_scheduler
+from repro.core.slices import config
+from repro.core.workload import WorkloadSpec, generate_jobs
+
+
+def _mk_jobs(n, seed=0, t=0.0):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    elk = [LINEAR, capped(2), capped(4), sublinear("exp-0.35"), sublinear("log-0.65")]
+    for i in range(n):
+        work = float(rng.uniform(0.5, 30.0))
+        el = elk[int(rng.integers(0, len(elk)))]
+        dl = t + float(rng.uniform(0.2, 6.0)) * el.duration(work, 7)
+        jobs.append(Job(i, JobKind.INFERENCE, arrival=t, work=work, deadline=dl, elasticity=el))
+    return jobs
+
+
+@pytest.mark.parametrize("name", list(SCHEDULERS))
+@pytest.mark.parametrize("cfg_id", [1, 3, 5, 9, 12])
+def test_assignment_validity(name, cfg_id):
+    sched = make_scheduler(name)
+    part = config(cfg_id)
+    jobs = _mk_jobs(12, seed=cfg_id)
+    out = sched.assign(0.0, part, jobs, {}, True)
+    # no slice double-booked; all ids valid; no done jobs scheduled
+    assert len(set(out.values())) == len(out)
+    assert all(0 <= s < part.num_slices for s in out.values())
+    ids = {j.job_id for j in jobs}
+    assert set(out).issubset(ids)
+    # work-conserving: min(#jobs, #slices) assignments made
+    assert len(out) == min(len(jobs), part.num_slices)
+
+
+@given(st.integers(0, 500), st.sampled_from([2, 3, 6, 9]))
+@settings(max_examples=40, deadline=None)
+def test_property_work_conserving_and_valid(seed, cfg_id):
+    part = config(cfg_id)
+    jobs = _mk_jobs(seed % 9 + 1, seed=seed)
+    for name in ("EDF-FS", "EDF-SS", "LLF", "LALF"):
+        out = make_scheduler(name).assign(0.0, part, jobs, {}, True)
+        assert len(set(out.values())) == len(out)
+        assert len(out) == min(len(jobs), part.num_slices)
+
+
+def test_edf_fs_priority_order():
+    part = config(3)  # 4g, 2g, 1g
+    jobs = _mk_jobs(5, seed=1)
+    jobs.sort(key=lambda j: j.deadline)
+    out = make_scheduler("EDF-FS").assign(0.0, part, jobs, {}, True)
+    # earliest deadline gets the fastest slice
+    assert out[jobs[0].job_id] == 0
+    # third earliest gets the 1g slice; later jobs wait
+    assert out[jobs[2].job_id] == 2
+    assert jobs[3].job_id not in out
+
+
+def test_edf_ss_picks_slowest_feasible():
+    part = config(3)  # 4g, 2g, 1g
+    # single job, lots of slack: must land on the 1g slice
+    j = Job(0, JobKind.INFERENCE, 0.0, work=1.0, deadline=100.0, elasticity=LINEAR)
+    out = make_scheduler("EDF-SS").assign(0.0, part, [j], {}, True)
+    assert out[0] == 2
+    # tight deadline: only 4g feasible
+    j2 = Job(1, JobKind.INFERENCE, 0.0, work=1.0, deadline=0.3, elasticity=LINEAR)
+    out = make_scheduler("EDF-SS").assign(0.0, part, [j2], {}, True)
+    assert out[1] == 0
+    # impossible deadline: fastest slice (paper rule)
+    j3 = Job(2, JobKind.INFERENCE, 0.0, work=10.0, deadline=0.1, elasticity=LINEAR)
+    out = make_scheduler("EDF-SS").assign(0.0, part, [j3], {}, True)
+    assert out[2] == 0
+
+
+def test_restricted_edf_ss_keeps_running_jobs():
+    part = config(5)  # 3g, 3g
+    a = Job(0, JobKind.INFERENCE, 0.0, work=9.0, deadline=50.0, elasticity=LINEAR)
+    b = Job(1, JobKind.INFERENCE, 0.0, work=9.0, deadline=60.0, elasticity=LINEAR)
+    sched = make_scheduler("EDF-SS")
+    cur = {0: 1, 1: 0}  # both running, swapped relative to fresh EDF order
+    out = sched.assign(1.0, part, [a, b], cur, True)
+    assert out == cur  # no gratuitous reshuffle
+
+
+def test_restricted_edf_ss_preempts_to_save_deadline():
+    part = config(2)  # 4g, 3g
+    # running job with late deadline occupies the 4g slice
+    runner = Job(0, JobKind.INFERENCE, 0.0, work=20.0, deadline=500.0, elasticity=LINEAR)
+    cur = {0: 0}
+    # urgent job can ONLY make its deadline on the 4g slice
+    urgent = Job(1, JobKind.INFERENCE, 0.0, work=4.0, deadline=1.2, elasticity=LINEAR)
+    out = make_scheduler("EDF-SS").assign(0.0, part, [runner, urgent], cur, True)
+    assert out[1] == 0  # urgent stole the fast slice
+    assert out.get(0) == 1  # victim re-queued onto the free 3g
+
+
+def test_llf_priority_is_laxity_not_deadline():
+    part = config(1)  # single 7g slice
+    # A: far deadline but huge work (low laxity). B: near deadline, tiny work.
+    a = Job(0, JobKind.TRAINING, 0.0, work=70.0, deadline=12.0, elasticity=LINEAR)
+    b = Job(1, JobKind.INFERENCE, 0.0, work=0.7, deadline=5.0, elasticity=LINEAR)
+    out = make_scheduler("LLF").assign(0.0, part, [a, b], {}, True)
+    # laxity(a) = 12 - 10 = 2 ; laxity(b) = 5 - 0.1 = 4.9 -> a runs
+    assert out[0] == 0 and 1 not in out
+    out2 = make_scheduler("EDF-FS").assign(0.0, part, [a, b], {}, True)
+    assert out2[1] == 0  # EDF picks b instead
+
+
+def test_lalf_uses_average_laxity():
+    part = config(3)
+    sched = make_scheduler("LALF")
+    j = Job(0, JobKind.INFERENCE, 0.0, work=7.0, deadline=20.0, elasticity=LINEAR)
+    lax = sched.job_laxity(0.0, part, j)
+    # mean duration across slices (4g, 2g, 1g): mean(7/4, 7/2, 7) = 4.08
+    assert lax == pytest.approx(20.0 - (7 / 4 + 7 / 2 + 7) / 3)
+
+
+def test_critical_laxity_timer():
+    part = config(1)
+    sched = make_scheduler("LLF")
+    run = Job(0, JobKind.TRAINING, 0.0, work=50.0, deadline=100.0, elasticity=LINEAR)
+    wait = Job(1, JobKind.INFERENCE, 0.0, work=7.0, deadline=9.0, elasticity=LINEAR)
+    cur = {0: 0}
+    t = sched.next_critical_time(0.0, part, [run, wait], cur)
+    # waiting laxity = 9 - 1 = 8; crosses threshold 1 at t = 7
+    assert t == pytest.approx(7.0)
+    wait.critical_events = sched.max_critical_preemptions
+    assert sched.next_critical_time(0.0, part, [run, wait], cur) is None

@@ -1,0 +1,177 @@
+"""Event-driven simulator invariants (unit + hypothesis)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import Job, JobKind, LINEAR, capped
+from repro.core.metrics import SimResult
+from repro.core.power import A100_250W
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import (
+    DayNightPolicy,
+    MIGSimulator,
+    NoMIGPolicy,
+    REPARTITION_PENALTY_MIN,
+    StaticPolicy,
+)
+from repro.core.workload import WorkloadSpec, generate_jobs
+
+
+def _sim(name="EDF-SS", **kw):
+    return MIGSimulator(make_scheduler(name), **kw)
+
+
+def test_single_job_exact_completion_and_energy():
+    # one linear job, work 6 1g-min, on config 5 (two 3g slices) -> 2 min
+    j = Job(0, JobKind.INFERENCE, 0.0, work=6.0, deadline=10.0, elasticity=LINEAR)
+    sim = _sim()
+    res = sim.run([j], policy=StaticPolicy(5))
+    assert j.completion == pytest.approx(2.0)
+    assert res.avg_tardiness == 0.0
+    # energy: 2 min at 3 busy slots
+    assert res.energy_wh == pytest.approx(A100_250W.energy_wh(3, 2.0))
+    assert res.busy_slot_minutes == pytest.approx(6.0)
+
+
+def test_tardiness_measured_exactly():
+    j = Job(0, JobKind.INFERENCE, 0.0, work=7.0, deadline=0.5, elasticity=LINEAR)
+    sim = _sim()
+    res = sim.run([j], policy=StaticPolicy(1))  # 7g slice: 1 minute
+    assert j.completion == pytest.approx(1.0)
+    assert res.avg_tardiness == pytest.approx(0.5)
+    assert res.max_tardiness == pytest.approx(0.5)
+    # tardiness integral equals summed tardiness when all jobs finish
+    assert res.extra["tardiness_integral"] == pytest.approx(0.5, abs=1e-6)
+
+
+def test_capped_job_gets_no_speedup_beyond_cap():
+    j = Job(0, JobKind.INFERENCE, 0.0, work=4.0, deadline=50.0, elasticity=capped(2))
+    sim = _sim()
+    sim.run([j], policy=StaticPolicy(1))  # 7g but capped at 2 -> 2 min
+    assert j.completion == pytest.approx(2.0)
+
+
+def test_all_jobs_complete_and_determinism():
+    spec = WorkloadSpec(horizon_min=300.0, constant_rate=0.4)
+    jobs1 = generate_jobs(spec, seed=11)
+    jobs2 = generate_jobs(spec, seed=11)
+    r1 = _sim().run(jobs1, policy=StaticPolicy(3))
+    r2 = _sim().run(jobs2, policy=StaticPolicy(3))
+    assert r1.num_jobs == len(jobs1)
+    assert r1.energy_wh == pytest.approx(r2.energy_wh)
+    assert r1.avg_tardiness == pytest.approx(r2.avg_tardiness)
+    assert r1.preemptions == r2.preemptions
+
+
+@given(st.integers(0, 300), st.sampled_from([1, 2, 3, 6, 9, 12]))
+@settings(max_examples=20, deadline=None)
+def test_property_conservation(seed, cfg_id):
+    """Busy-slot-minutes == total work processed; all jobs complete."""
+    spec = WorkloadSpec(horizon_min=120.0, constant_rate=0.3)
+    jobs = generate_jobs(spec, seed=seed)
+    sim = _sim()
+    res = sim.run(jobs, policy=StaticPolicy(cfg_id))
+    assert res.num_jobs == len(jobs)
+    for j in jobs:
+        assert j.remaining == pytest.approx(0.0, abs=1e-6)
+        assert j.completion is not None and j.completion >= j.arrival
+    # processed work (in slot-minutes at unit rate) <= busy slot minutes:
+    # inelastic jobs occupy more slots than they productively use
+    total_work = sum(j.work for j in jobs)
+    assert res.busy_slot_minutes >= total_work - 1e-6
+    # energy bounded by idle..peak over the makespan
+    mk = res.extra["makespan_min"]
+    assert res.energy_wh <= A100_250W.energy_wh(7, mk) + 1e-6
+    assert res.energy_wh >= A100_250W.energy_wh(0, mk) - 1e-6
+
+
+def test_tardiness_integral_matches_sum():
+    spec = WorkloadSpec(horizon_min=240.0, constant_rate=0.5)
+    jobs = generate_jobs(spec, seed=3)
+    res = _sim().run(jobs, policy=StaticPolicy(6))
+    assert res.extra["tardiness_integral"] == pytest.approx(
+        res.total_tardiness, rel=1e-6, abs=1e-6
+    )
+
+
+def test_repartition_penalty_blocks_processing():
+    # job arrives during the switch; nothing processes for 4 s
+    j0 = Job(0, JobKind.INFERENCE, 0.0, work=1.0, deadline=5.0, elasticity=LINEAR)
+    sim = _sim()
+
+    class SwitchOnce:
+        initial_config = 1
+        done = False
+
+        def decide(self, t, s):
+            if not self.done:
+                self.done = True
+                return 2
+            return None
+
+        def next_timer(self, t):
+            return None
+
+    res = sim.run([j0], policy=SwitchOnce())
+    # switch fires at arrival: 4 s stall; EDF-SS then picks the SLOWEST
+    # feasible slice of config 2 (3g): 1/3 min
+    assert j0.completion == pytest.approx(REPARTITION_PENALTY_MIN + 1.0 / 3.0)
+    assert res.repartitions == 1
+
+
+def test_repartition_preempts_all_running():
+    jobs = [
+        Job(0, JobKind.TRAINING, 0.0, 30.0, 100.0, LINEAR),
+        Job(1, JobKind.TRAINING, 0.0, 30.0, 100.0, LINEAR),
+        Job(2, JobKind.INFERENCE, 5.0, 1.0, 50.0, LINEAR),
+    ]
+
+    class SwitchAtSecondArrival:
+        initial_config = 5
+        n = 0
+
+        def decide(self, t, s):
+            self.n += 1
+            return 2 if self.n == 3 else None
+
+        def next_timer(self, t):
+            return None
+
+    sim = _sim()
+    res = sim.run(jobs, policy=SwitchAtSecondArrival())
+    assert res.repartitions == 1
+    assert res.preemptions >= 2  # both running jobs kicked to queue
+
+
+def test_daynight_policy_switches_at_boundaries():
+    spec = WorkloadSpec(horizon_min=24 * 60.0)
+    jobs = generate_jobs(spec, seed=9)
+    sim = _sim()
+    res = sim.run(jobs, policy=DayNightPolicy())
+    assert res.repartitions >= 2  # 5:00 and 17:00
+    cfgs = [c for _, c in sim.config_trace]
+    assert 6 in cfgs and 2 in cfgs
+
+
+def test_no_mig_runs_single_slice_with_speedup():
+    spec = WorkloadSpec(horizon_min=120.0, constant_rate=0.2)
+    jobs = generate_jobs(spec, seed=2)
+    sim = MIGSimulator(make_scheduler("EDF-SS"), mig_enabled=False)
+    res = sim.run(jobs, policy=NoMIGPolicy())
+    assert res.repartitions == 0
+    assert sim.partition.config_id == 1
+
+
+def test_restricted_preemption_reduction():
+    """Fig. 4: restricted EDF-SS cuts preemptions 63-99% at similar ET."""
+    spec = WorkloadSpec(horizon_min=480.0, constant_rate=0.5)
+    tot = {"EDF-SS": 0, "EDF-SS-unrestricted": 0}
+    for name in tot:
+        sim = _sim(name)
+        for s in range(3):
+            tot[name] += sim.run(generate_jobs(spec, seed=s), policy=StaticPolicy(6)).preemptions
+    reduction = 1.0 - tot["EDF-SS"] / max(tot["EDF-SS-unrestricted"], 1)
+    assert 0.5 <= reduction <= 1.0, reduction

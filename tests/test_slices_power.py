@@ -1,0 +1,65 @@
+"""Fig. 1 partition table + Fig. 3 power model."""
+
+import pytest
+
+from repro.core.power import A100_250W, TPU_V5E_POD, PowerModel, make_saturating_power
+from repro.core.slices import MIG_CONFIGS, TOTAL_SLOTS, config, config_ids
+
+
+def test_twelve_configs():
+    assert len(MIG_CONFIGS) == 12
+    assert list(config_ids()) == list(range(1, 13))
+
+
+def test_fig1_slot_and_memory_budgets():
+    for cid, part in MIG_CONFIGS.items():
+        assert part.total_slots <= TOTAL_SLOTS
+        assert part.total_memory_gb <= 40
+        assert all(s.slots in (1, 2, 3, 4, 7) for s in part.slices)
+
+
+def test_fig1_exact_rows():
+    assert config(1).slot_sizes() == (7,)
+    assert config(2).slot_sizes() == (4, 3)
+    assert config(3).slot_sizes() == (4, 2, 1)
+    assert config(5).slot_sizes() == (3, 3)  # the "holed" config
+    assert config(12).slot_sizes() == (1,) * 7
+    # at most one 1g.10gb per config (paper §III-A)
+    for part in MIG_CONFIGS.values():
+        assert sum(1 for s in part.slices if s.name == "1g.10gb") <= 1
+
+
+def test_config5_has_hole():
+    assert config(5).total_slots == 6  # 1 dead slot
+
+
+def test_power_monotone_and_saturating():
+    w = A100_250W.watts_by_busy_slots
+    assert all(b >= a for a, b in zip(w, w[1:]))
+    # steep early, flat late (Fig. 3): marginal power of slot 1 >> slot 7
+    assert (w[1] - w[0]) > 10 * (w[7] - w[6])
+    # after 4/7 busy, near-peak (paper: "negligible increase")
+    assert w[4] > 0.95 * w[7]
+
+
+def test_power_interpolation_and_energy():
+    p = A100_250W
+    assert p.power_watts(0) == p.idle_watts
+    assert p.power_watts(7) == p.peak_watts
+    mid = p.power_watts(1.5)
+    assert p.power_watts(1) < mid < p.power_watts(2)
+    assert p.energy_wh(7, 60.0) == pytest.approx(p.peak_watts)
+
+
+def test_saturating_builder_shape():
+    m = make_saturating_power("x", 100.0, 300.0, 7)
+    assert m.idle_watts == pytest.approx(100.0)
+    assert m.peak_watts >= 300.0 - 1e-6
+    assert TPU_V5E_POD.total_slots == 7
+
+
+def test_fastest_slowest_indices():
+    part = config(3)  # 4g, 2g, 1g
+    assert part.fastest_slice_index() == 0
+    assert part.slowest_slice_index() == 2
+    assert part.sorted_indices(descending=True)[0] == 0

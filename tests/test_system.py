@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These assert the paper's HEADLINE CLAIMS hold in this reproduction:
+  1. Table II ordering: EDF-SS < EDF-FS < LLF < LALF on ET over the
+     experiment basket (§V-B).
+  2. Fig. 4: restricted EDF-SS preempts 63-99% less at similar ET.
+  3. Table III direction: dynamic repartitioning beats all benchmarks and
+     no-MIG is far worst.
+"""
+
+import pytest
+
+from repro.core.metrics import et_table
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import (
+    DayNightPolicy,
+    MIGSimulator,
+    NoMIGPolicy,
+    StaticPolicy,
+)
+from repro.core.workload import WorkloadSpec, generate_jobs
+from repro.launch.cluster_sim import queue_heuristic_policy
+
+
+def _eval(policy_factory, spec, seeds, scheduler="EDF-SS", mig_enabled=True):
+    sim = MIGSimulator(make_scheduler(scheduler), mig_enabled=mig_enabled)
+    return [sim.run(generate_jobs(spec, seed=s), policy=policy_factory()) for s in seeds]
+
+
+def test_table2_scheduler_ordering_on_basket():
+    """EDF-SS wins the Table II basket; LLF < LALF."""
+    specs = [
+        WorkloadSpec(),  # diurnal, 80% inference
+        WorkloadSpec(horizon_min=480.0, constant_rate=0.1),
+        WorkloadSpec(horizon_min=480.0, constant_rate=0.5),
+        WorkloadSpec(inference_split=0.2),
+    ]
+    names = ["EDF-FS", "EDF-SS", "LLF", "LALF"]
+    per = {n: [] for n in names}
+    for si, spec in enumerate(specs):
+        for cfg in range(1, 13):
+            for n in names:
+                sim = MIGSimulator(make_scheduler(n))
+                jobs = generate_jobs(spec, seed=9000 * si + 17 * cfg)
+                per[n].append(sim.run(jobs, policy=StaticPolicy(cfg)))
+    table, _ = et_table(per)
+    assert table["EDF-SS"] < table["EDF-FS"], table
+    assert table["LLF"] < table["LALF"], table
+    assert table["EDF-SS"] < table["LLF"], table
+
+
+def test_fig4_preemption_reduction_with_similar_et():
+    """Aggregate over all 12 configs (Fig. 4 is per-config; the ET-parity
+    claim holds on the experiment aggregate — see EXPERIMENTS.md)."""
+    spec = WorkloadSpec()
+    per = {"EDF-SS": [], "EDF-SS-unrestricted": []}
+    preempt = {n: 0 for n in per}
+    for n in per:
+        sim = MIGSimulator(make_scheduler(n))
+        for cfg in range(1, 13):
+            for s in range(2):
+                r = sim.run(generate_jobs(spec, seed=100 * cfg + s), policy=StaticPolicy(cfg))
+                per[n].append(r)
+                preempt[n] += r.preemptions
+    table, _ = et_table(per)
+    reduction = 1 - preempt["EDF-SS"] / max(preempt["EDF-SS-unrestricted"], 1)
+    assert 0.5 <= reduction <= 0.995, reduction
+    # similar ET on the aggregate: restricted within 15% of unrestricted
+    assert table["EDF-SS"] <= 1.15 * table["EDF-SS-unrestricted"], table
+
+
+def test_table3_no_mig_is_far_worst():
+    spec = WorkloadSpec()
+    seeds = range(40_000, 40_006)
+    per = {
+        "NoMIG": _eval(NoMIGPolicy, spec, seeds, mig_enabled=False),
+        "Static": _eval(lambda: StaticPolicy(3), spec, seeds),
+        "DayNight": _eval(DayNightPolicy, spec, seeds),
+        "Dynamic": _eval(queue_heuristic_policy, spec, seeds),
+    }
+    table, _ = et_table(per)
+    assert table["NoMIG"] > 2.0 * table["Static"], table
+    assert table["NoMIG"] > 2.0 * table["DayNight"], table
+
+
+def test_table3_dynamic_beats_every_benchmark():
+    spec = WorkloadSpec()
+    seeds = range(41_000, 41_008)
+    per = {
+        "Static": _eval(lambda: StaticPolicy(3), spec, seeds),
+        "DayNight": _eval(DayNightPolicy, spec, seeds),
+        "Dynamic": _eval(queue_heuristic_policy, spec, seeds),
+        "NoMIG": _eval(NoMIGPolicy, spec, seeds, mig_enabled=False),
+    }
+    table, _ = et_table(per)
+    assert table["Dynamic"] < table["Static"], table
+    assert table["Dynamic"] < table["DayNight"], table
+    assert table["Dynamic"] < table["NoMIG"], table
