@@ -1,15 +1,18 @@
-"""Shared benchmark plumbing: evaluation loops + CSV emit."""
+"""Shared benchmark plumbing: CSV emit + a thin shim over ``repro.sweep``.
+
+The evaluation loops that used to live here are now the sweep engine
+(:mod:`repro.sweep`); ``eval_algo`` remains as the compatibility surface for
+ad-hoc experiments and converts cells/results at the boundary.
+"""
 
 from __future__ import annotations
 
 import os
-import time
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
-from repro.core.metrics import SimResult, et_table
-from repro.core.schedulers import make_scheduler
-from repro.core.simulator import MIGSimulator, StaticPolicy
-from repro.core.workload import WorkloadSpec, generate_jobs
+from repro.core.metrics import SimResult
+from repro.core.workload import WorkloadSpec
+from repro.sweep import make_cell, result_to_sim_result, run_cells, summarize_results
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -21,14 +24,38 @@ def eval_algo(
     seeds: Iterable[int],
     policy_factory=None,
     mig_enabled: bool = True,
+    workers: int = 0,
 ) -> List[SimResult]:
-    sim = MIGSimulator(make_scheduler(scheduler), mig_enabled=mig_enabled)
-    out = []
-    for s in seeds:
-        jobs = generate_jobs(spec, seed=s)
-        policy = policy_factory() if policy_factory else StaticPolicy(config_id)
-        out.append(sim.run(jobs, policy=policy))
-    return out
+    """Evaluate one (scheduler, config, workload) point over ``seeds``.
+
+    With the default static policy the cells go through the sweep engine —
+    memoized and parallelizable (``workers``).  An ad-hoc ``policy_factory``
+    callable forces the inline, uncached path (closures are neither picklable
+    nor content-addressable); pass a registered policy via
+    :func:`repro.sweep.run_cells` directly to keep caching.
+    """
+    cells = [
+        make_cell(
+            experiment="eval_algo",
+            group=scheduler,
+            scheduler=scheduler,
+            workload=spec,
+            seed=s,
+            policy="static",
+            policy_kwargs={"config_id": config_id},
+            mig_enabled=mig_enabled,
+        )
+        for s in seeds
+    ]
+    outcome = run_cells(
+        "eval_algo",
+        cells,
+        workers=workers,
+        cache=policy_factory is None,
+        artifacts_dir=None,
+        policy_factory=policy_factory,
+    )
+    return [result_to_sim_result(r) for r in outcome.results]
 
 
 def emit(name: str, rows: Sequence[Dict], keys: Optional[Sequence[str]] = None) -> str:
@@ -60,11 +87,4 @@ def _fmt(v) -> str:
 
 
 def summarize(results: List[SimResult]) -> Dict[str, float]:
-    n = max(len(results), 1)
-    return {
-        "energy_wh": sum(r.energy_wh for r in results) / n,
-        "avg_tardiness": sum(r.avg_tardiness for r in results) / n,
-        "preemptions": sum(r.preemptions for r in results) / n,
-        "repartitions": sum(r.repartitions for r in results) / n,
-        "deadline_misses": sum(r.deadline_misses for r in results) / n,
-    }
+    return summarize_results(results)

@@ -1,210 +1,59 @@
 """Paper tables/figures as benchmark functions (DESIGN.md §6 index).
 
-Each function reproduces one table/figure and returns CSV rows; iteration
-counts are scaled by ``--scale`` in benchmarks.run (1.0 = CI-sized).
+Each function is now a thin wrapper over the declarative grids in
+:mod:`repro.sweep.grids`: the grid enumerates the cells (in the same order
+the old serial loops did, so the numbers are identical at the same seeds),
+the sweep engine runs them — parallel across ``workers`` processes and
+memoized on disk — and the wrapper emits the aggregated CSV.
+
+``python -m repro.sweep --grid <name>`` runs the same grids without the
+CSV emit; ``--workers``/``--scale`` behave identically.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-from benchmarks.common import emit, eval_algo, summarize
-from repro.core.metrics import et_table
-from repro.core.simulator import DayNightPolicy, NoMIGPolicy, StaticPolicy
-from repro.core.workload import WorkloadSpec
-from repro.launch.cluster_sim import queue_heuristic_policy
-
-ALGOS = ["EDF-FS", "EDF-SS", "LLF", "LALF"]
+from benchmarks.common import emit
+from repro.sweep import run_grid
 
 
-def _basket_specs() -> List[WorkloadSpec]:
-    return [
-        WorkloadSpec(),
-        WorkloadSpec(horizon_min=480.0, constant_rate=0.1),
-        WorkloadSpec(horizon_min=480.0, constant_rate=0.5),
-        WorkloadSpec(inference_split=0.2),
-    ]
+def _grid_bench(name: str, scale: float, workers: int) -> List[Dict]:
+    rows, _outcome = run_grid(name, scale=scale, workers=workers)
+    emit(name, rows)
+    return rows
 
 
-def table2_schedulers(scale: float = 1.0) -> List[Dict]:
+def table2_schedulers(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Table II: ET of the four in-configuration scheduling algorithms."""
-    iters = max(int(2 * scale), 1)
-    per = {n: [] for n in ALGOS}
-    for si, spec in enumerate(_basket_specs()):
-        for cfg in range(1, 13):
-            for n in ALGOS:
-                per[n].extend(
-                    eval_algo(n, spec, cfg, seeds=[9000 * si + 17 * cfg + k for k in range(iters)])
-                )
-    table, a = et_table(per)
-    rows = []
-    for n in ALGOS:
-        s = summarize(per[n])
-        rows.append({"algorithm": n, "ET": table[n], **s})
-    emit("table2_schedulers", rows)
-    return rows
+    return _grid_bench("table2_schedulers", scale, workers)
 
 
-def fig4_preemption(scale: float = 1.0) -> List[Dict]:
+def fig4_preemption(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Fig. 4: preemptions, restricted vs unrestricted EDF-SS, per config."""
-    iters = max(int(2 * scale), 1)
-    spec = WorkloadSpec()
-    rows = []
-    for cfg in range(1, 13):
-        rec: Dict = {"config": cfg}
-        per = {}
-        for n in ("EDF-SS", "EDF-SS-unrestricted"):
-            rs = eval_algo(n, spec, cfg, seeds=[100 * cfg + k for k in range(iters)])
-            per[n] = rs
-            rec[f"preempt_{'restricted' if n == 'EDF-SS' else 'unrestricted'}"] = (
-                sum(r.preemptions for r in rs) / len(rs)
-            )
-        t, _ = et_table(per)
-        rec["et_restricted"] = t["EDF-SS"]
-        rec["et_unrestricted"] = t["EDF-SS-unrestricted"]
-        rec["reduction_pct"] = 100.0 * (
-            1 - rec["preempt_restricted"] / max(rec["preempt_unrestricted"], 1e-9)
-        )
-        rows.append(rec)
-    emit("fig4_preemption", rows)
-    return rows
+    return _grid_bench("fig4_preemption", scale, workers)
 
 
-def fig6_utilization(scale: float = 1.0) -> List[Dict]:
+def fig6_utilization(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Fig. 6: % time per utilization level (busy slots 0..7), per algorithm."""
-    from repro.core.schedulers import make_scheduler
-    from repro.core.simulator import MIGSimulator
-    from repro.core.workload import generate_jobs
-
-    iters = max(int(2 * scale), 1)
-    spec = WorkloadSpec(horizon_min=480.0, constant_rate=0.5)
-    rows = []
-    for n in ALGOS:
-        sim = MIGSimulator(make_scheduler(n))
-        hist: Dict[int, float] = {}
-        total = 0.0
-        for s in range(iters):
-            sim.run(generate_jobs(spec, seed=600 + s), policy=StaticPolicy(4))
-            for k, v in sim.util_histogram.items():
-                hist[k] = hist.get(k, 0.0) + v
-                total += v
-        row = {"algorithm": n}
-        for k in range(8):
-            row[f"util_{k}"] = 100.0 * hist.get(k, 0.0) / max(total, 1e-9)
-        rows.append(row)
-    emit("fig6_utilization", rows)
-    return rows
+    return _grid_bench("fig6_utilization", scale, workers)
 
 
-def fig7_fig8_arrival(scale: float = 1.0) -> List[Dict]:
+def fig7_fig8_arrival(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Figs. 7-8: ET across configurations at arrival rates 0.1 and 0.75."""
-    iters = max(int(2 * scale), 1)
-    rows = []
-    for rate in (0.1, 0.5, 0.75):
-        spec = WorkloadSpec(horizon_min=480.0, constant_rate=rate)
-        for cfg in range(1, 13):
-            per = {
-                n: eval_algo(n, spec, cfg, seeds=[300 * cfg + k for k in range(iters)])
-                for n in ALGOS
-            }
-            t, _ = et_table(per)
-            rows.append({"rate": rate, "config": cfg, **{n: t[n] for n in ALGOS}})
-    emit("fig7_fig8_arrival", rows)
-    return rows
+    return _grid_bench("fig7_fig8_arrival", scale, workers)
 
 
-def fig9_fig10_split(scale: float = 1.0) -> List[Dict]:
+def fig9_fig10_split(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Figs. 9-10: ET across configurations at 20% / 80% inference split."""
-    iters = max(int(2 * scale), 1)
-    rows = []
-    for split in (0.2, 0.8):
-        spec = WorkloadSpec(inference_split=split)
-        for cfg in range(1, 13):
-            per = {
-                n: eval_algo(n, spec, cfg, seeds=[500 * cfg + k for k in range(iters)])
-                for n in ALGOS
-            }
-            t, _ = et_table(per)
-            rows.append({"inference_split": split, "config": cfg, **{n: t[n] for n in ALGOS}})
-    emit("fig9_fig10_split", rows)
-    return rows
+    return _grid_bench("fig9_fig10_split", scale, workers)
 
 
-def _dqn_policy_factory(params_path: str = "artifacts/dqn_params.npz"):
-    import os
-
-    from repro.core.rl import DQNConfig, DQNLearner, greedy_policy
-    from repro.core.rl.env import FEATURE_DIM
-
-    if not os.path.exists(params_path):
-        return None
-    learner = DQNLearner(DQNConfig(state_dim=FEATURE_DIM))
-    learner.load(params_path)
-    return lambda: greedy_policy(learner)
-
-
-def table3_repartitioning(scale: float = 1.0) -> List[Dict]:
+def table3_repartitioning(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Table III: dynamic repartitioning vs the three benchmarks."""
-    iters = max(int(10 * scale), 2)
-    spec = WorkloadSpec()
-    seeds = [40_000 + k for k in range(iters)]
-    per = {
-        "NoMIG": eval_algo("EDF-SS", spec, 1, seeds, NoMIGPolicy, mig_enabled=False),
-        "StaticMIG": eval_algo("EDF-SS", spec, 3, seeds),
-        "DayNightMIG": eval_algo("EDF-SS", spec, 0, seeds, DayNightPolicy),
-        "DynamicMIG-heuristic": eval_algo(
-            "EDF-SS", spec, 0, seeds, queue_heuristic_policy
-        ),
-    }
-    dqn = _dqn_policy_factory()
-    if dqn is not None:
-        per["DynamicMIG-DQN"] = eval_algo("EDF-SS", spec, 0, seeds, dqn)
-    table, a = et_table(per)
-    rows = []
-    base = {k: table[k] for k in per}
-    for name in per:
-        s = summarize(per[name])
-        rows.append(
-            {
-                "model": name,
-                "ET": table[name],
-                "improvement_vs_NoMIG_pct": 100 * (1 - table[name] / base["NoMIG"]),
-                **s,
-            }
-        )
-    emit("table3_repartitioning", rows)
-    return rows
+    return _grid_bench("table3_repartitioning", scale, workers)
 
 
-def fig11_preferences(scale: float = 1.0) -> List[Dict]:
+def fig11_preferences(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Fig. 11: preferred configurations by 4-hour interval (dynamic policy)."""
-    from repro.core.schedulers import make_scheduler
-    from repro.core.simulator import MIGSimulator
-    from repro.core.workload import generate_jobs
-
-    iters = max(int(6 * scale), 2)
-    spec = WorkloadSpec()
-    dqn = _dqn_policy_factory()
-    factory = dqn if dqn is not None else queue_heuristic_policy
-    occupancy: Dict[int, Dict[int, float]] = {b: {} for b in range(6)}
-    sim = MIGSimulator(make_scheduler("EDF-SS"))
-    for s in range(iters):
-        sim.run(generate_jobs(spec, seed=77_000 + s), policy=factory())
-        trace = sim.config_trace + [(24 * 60.0, sim.config_trace[-1][1])]
-        for (t0, c), (t1, _) in zip(trace, trace[1:]):
-            t0c, t1c = min(t0, 1440.0), min(t1, 1440.0)
-            while t0c < t1c:
-                b = int(t0c // 240) % 6
-                upper = min((int(t0c // 240) + 1) * 240.0, t1c)
-                occupancy[b][c] = occupancy[b].get(c, 0.0) + (upper - t0c)
-                t0c = upper
-    rows = []
-    for b in range(6):
-        tot = sum(occupancy[b].values()) or 1.0
-        row = {"interval": f"{b*4:02d}:00-{b*4+4:02d}:00"}
-        for c in range(1, 13):
-            row[f"cfg{c}_pct"] = 100.0 * occupancy[b].get(c, 0.0) / tot
-        rows.append(row)
-    emit("fig11_preferences", rows)
-    return rows
+    return _grid_bench("fig11_preferences", scale, workers)

@@ -1,10 +1,12 @@
 """Benchmark runner: one function per paper table/figure + substrate benches.
 
-``PYTHONPATH=src python -m benchmarks.run [--scale S] [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--scale S] [--only NAME] [--workers N]``
 
 Prints ``name,us_per_call,derived`` style CSV blocks per benchmark and saves
 them under artifacts/bench/.  --scale grows iteration counts (1.0 = CI-sized;
-the EXPERIMENTS.md numbers used --scale 4).
+the EXPERIMENTS.md numbers used --scale 4).  --workers fans the paper-table
+sweeps out over worker processes (see repro.sweep); substrate benches stay
+single-process.
 """
 
 from __future__ import annotations
@@ -18,6 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--workers", type=int, default=0)
     args = ap.parse_args()
 
     from benchmarks.paper_tables import (
@@ -32,7 +35,7 @@ def main() -> None:
     from benchmarks.kernels_bench import kernel_bench
     from benchmarks.roofline_table import cluster_benchmark, roofline_table
 
-    benches = {
+    sweep_benches = {
         "table2_schedulers": table2_schedulers,
         "fig4_preemption": fig4_preemption,
         "fig6_utilization": fig6_utilization,
@@ -40,6 +43,9 @@ def main() -> None:
         "fig9_fig10_split": fig9_fig10_split,
         "table3_repartitioning": table3_repartitioning,
         "fig11_preferences": fig11_preferences,
+    }
+    benches = {
+        **sweep_benches,
         "kernels_bench": kernel_bench,
         "roofline_table": roofline_table,
         "cluster_day": cluster_benchmark,
@@ -50,7 +56,10 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn(scale=args.scale)
+            if name in sweep_benches:
+                fn(scale=args.scale, workers=args.workers)
+            else:
+                fn(scale=args.scale)
             print(f"# {name} done in {time.time()-t0:.1f}s\n")
         except Exception as e:  # noqa: BLE001
             failures += 1

@@ -92,17 +92,51 @@ def evaluate_policy(
     scheduler_name: str = "EDF-SS",
     seed: int = 10_000,
     mig_enabled: bool = True,
+    workers: int = 0,
 ) -> List[SimResult]:
     """Run ``num_iterations`` independent day simulations under a policy.
 
-    ``policy_factory`` is called once per iteration and must return a
-    RepartitionPolicy (fresh DQN greedy agents keep per-episode state).
+    ``policy_factory`` is either a zero-arg callable returning a
+    RepartitionPolicy (fresh DQN greedy agents keep per-episode state), or a
+    registered sweep policy — a name like ``"heuristic"`` or a
+    ``(name, kwargs)`` tuple, e.g. ``("dqn", {"params_path": ...})``.
+
+    The runs go through the sweep engine (:mod:`repro.sweep`): registered
+    policies are memoized on disk and fan out over ``workers`` processes;
+    ad-hoc callables run inline and uncached (a closure over live learner
+    state is neither picklable nor content-addressable).
     """
+    from repro.sweep import make_cell, result_to_sim_result, run_cells
+
     spec = spec or WorkloadSpec()
-    sim = MIGSimulator(make_scheduler(scheduler_name), mig_enabled=mig_enabled)
-    results: List[SimResult] = []
-    for it in range(num_iterations):
-        jobs = generate_jobs(spec, seed=seed + it)
-        policy = policy_factory()
-        results.append(sim.run(jobs, policy=policy))
-    return results
+    if isinstance(policy_factory, str):
+        policy_name, policy_kwargs = policy_factory, {}
+        factory = None
+    elif isinstance(policy_factory, tuple):
+        policy_name, policy_kwargs = policy_factory
+        factory = None
+    else:
+        policy_name, policy_kwargs = "static", {}  # placeholder; factory wins
+        factory = policy_factory
+    cells = [
+        make_cell(
+            experiment="evaluate_policy",
+            group=policy_name,
+            scheduler=scheduler_name,
+            workload=spec,
+            seed=seed + it,
+            policy=policy_name,
+            policy_kwargs=policy_kwargs,
+            mig_enabled=mig_enabled,
+        )
+        for it in range(num_iterations)
+    ]
+    outcome = run_cells(
+        "evaluate_policy",
+        cells,
+        workers=workers,
+        cache=factory is None,
+        artifacts_dir=None,
+        policy_factory=factory,
+    )
+    return [result_to_sim_result(r) for r in outcome.results]

@@ -38,7 +38,14 @@ __all__ = [
     "CallbackPolicy",
     "MIGSimulator",
     "REPARTITION_PENALTY_MIN",
+    "SIM_VERSION",
 ]
+
+# Version tag of the simulation semantics.  Bump whenever a change alters the
+# numbers a run produces (event ordering, power model wiring, penalty, ...);
+# the sweep cache (repro.sweep) keys cells on it so stale results never
+# survive a semantics change.
+SIM_VERSION = "mig-sim-1"
 
 # §IV-D-3: destroying/recreating MIG slices takes ~4 seconds.
 REPARTITION_PENALTY_MIN = 4.0 / 60.0

@@ -1,0 +1,32 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The kernels target the current Pallas surface, but the name of the TPU
+compiler-params struct has moved across jax releases:
+
+* jax <= 0.4.x exposes ``pltpu.TPUCompilerParams``;
+* newer jax renames it to ``pltpu.CompilerParams``.
+
+``tpu_compiler_params(...)`` resolves whichever exists at import time so every
+kernel builds on any toolchain the container bakes in.  Keep all version
+probing here — kernels must not touch ``hasattr(pltpu, ...)`` themselves.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams", "tpu_compiler_params"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None
+)
+if CompilerParams is None:  # pragma: no cover - only on exotic jax builds
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version"
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params struct for :func:`pl.pallas_call`."""
+    return CompilerParams(**kwargs)

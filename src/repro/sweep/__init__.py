@@ -1,0 +1,44 @@
+"""Process-parallel, memoized sweep engine for the paper's experiment grids.
+
+The paper's headline results are all sweeps — scheduler x config x workload
+x seed grids pushed through the event-driven :class:`MIGSimulator`.  This
+package turns each of them into a declarative grid of JSON cells, fans cells
+out over worker processes, memoizes finished cells in a content-addressed
+on-disk cache, and writes byte-stable JSONL artifacts for CI to diff.
+
+Quickstart::
+
+    python -m repro.sweep --grid table2_schedulers --workers 4
+    python -m repro.sweep --grid smoke --scale 0.1 --workers 2
+
+See :mod:`repro.sweep.grids` for the registry and :mod:`repro.sweep.runner`
+for execution semantics.
+"""
+
+from repro.sweep.cache import SweepCache
+from repro.sweep.cells import (
+    cell_hash,
+    group_results,
+    make_cell,
+    make_policy,
+    result_to_sim_result,
+    run_cell,
+)
+from repro.sweep.grids import GRIDS, GridDef, run_grid, summarize_results
+from repro.sweep.runner import SweepOutcome, run_cells
+
+__all__ = [
+    "GRIDS",
+    "GridDef",
+    "SweepCache",
+    "SweepOutcome",
+    "cell_hash",
+    "group_results",
+    "make_cell",
+    "make_policy",
+    "result_to_sim_result",
+    "run_cell",
+    "run_cells",
+    "run_grid",
+    "summarize_results",
+]

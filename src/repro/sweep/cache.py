@@ -1,0 +1,65 @@
+"""On-disk memo cache for completed sweep cells.
+
+One JSON file per cell under the cache directory, named by the cell's
+content hash (params + simulator version tag).  Writes are atomic
+(tmp + rename) so a crashed worker can never leave a torn entry, and the
+parent persists each result the moment it arrives — a re-run after an
+interrupt recomputes only the missing cells.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+from repro.core.simulator import SIM_VERSION
+
+__all__ = ["SweepCache", "DEFAULT_CACHE_DIR"]
+
+DEFAULT_CACHE_DIR = os.path.join("artifacts", "sweeps", "cache")
+
+
+class SweepCache:
+    def __init__(self, root: str = DEFAULT_CACHE_DIR) -> None:
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """Return the memoized result dict for ``key``, or None."""
+        try:
+            with open(self._path(key)) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        if payload.get("sim_version") != SIM_VERSION:
+            # hash already covers the version; this guards hand-copied files
+            self.misses += 1
+            return None
+        self.hits += 1
+        return payload["result"]
+
+    def put(self, key: str, cell: Dict[str, Any], result: Dict[str, Any]) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        payload = {"sim_version": SIM_VERSION, "cell": cell, "result": result}
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, self._path(key))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def __len__(self) -> int:
+        try:
+            return sum(1 for n in os.listdir(self.root) if n.endswith(".json"))
+        except FileNotFoundError:
+            return 0

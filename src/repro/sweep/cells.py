@@ -1,0 +1,238 @@
+"""Sweep cells: the unit of work of the parallel sweep engine.
+
+A *cell* is one simulator run, described entirely by JSON-serializable data:
+
+``{experiment, group, scheduler, policy, policy_kwargs, workload, seed,
+mig_enabled, initial_config}``
+
+* ``experiment`` names the grid (e.g. ``table2_schedulers``) and ``group``
+  the aggregation bucket inside it (e.g. the algorithm name);
+* ``policy`` + ``policy_kwargs`` name a registered repartitioning policy so
+  cells can cross process boundaries (a :class:`RepartitionPolicy` instance
+  is not picklable in general, a spec always is);
+* ``workload`` is the fully-resolved :class:`WorkloadSpec` field dict;
+* ``seed`` drives :func:`generate_jobs`, making the cell deterministic.
+
+``cell_hash`` is a content hash over the cell params plus the simulator
+version tag (:data:`repro.core.simulator.SIM_VERSION`); the on-disk cache
+keys on it, so a semantics bump invalidates every memoized result at once.
+
+This module deliberately imports only the numpy-based core (no jax) so
+worker processes start fast; the DQN policy imports ``repro.core.rl``
+lazily inside its factory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+from repro.core.metrics import SimResult
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import (
+    SIM_VERSION,
+    DayNightPolicy,
+    MIGSimulator,
+    NoMIGPolicy,
+    RepartitionPolicy,
+    StaticPolicy,
+)
+from repro.core.workload import WorkloadSpec, generate_jobs
+
+__all__ = [
+    "POLICIES",
+    "canonical_json",
+    "cell_hash",
+    "make_cell",
+    "make_policy",
+    "result_to_sim_result",
+    "run_cell",
+    "workload_to_dict",
+]
+
+Cell = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# policy registry (name -> factory taking the cell's policy_kwargs)
+
+def _dqn_policy(params_path: str, initial_config: int = 2) -> RepartitionPolicy:
+    from repro.core.rl import DQNConfig, DQNLearner, greedy_policy
+    from repro.core.rl.env import FEATURE_DIM
+
+    learner = DQNLearner(DQNConfig(state_dim=FEATURE_DIM))
+    learner.load(params_path)
+    return greedy_policy(learner, initial_config=initial_config)
+
+
+def _heuristic_policy() -> RepartitionPolicy:
+    from repro.launch.cluster_sim import queue_heuristic_policy
+
+    return queue_heuristic_policy()
+
+
+POLICIES: Dict[str, Callable[..., RepartitionPolicy]] = {
+    "static": lambda config_id=3: StaticPolicy(config_id),
+    "nomig": lambda: NoMIGPolicy(),
+    "daynight": lambda day_config=6, night_config=2: DayNightPolicy(
+        day_config, night_config
+    ),
+    "heuristic": _heuristic_policy,
+    "dqn": _dqn_policy,
+}
+
+
+def make_policy(name: str, kwargs: Optional[Mapping[str, Any]] = None) -> RepartitionPolicy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; registered: {sorted(POLICIES)}")
+    # underscore-prefixed kwargs are hash-only annotations (e.g. the weights
+    # digest), not factory arguments
+    clean = {k: v for k, v in dict(kwargs or {}).items() if not k.startswith("_")}
+    return POLICIES[name](**clean)
+
+
+# ----------------------------------------------------------------------
+# cell construction + hashing
+
+def file_digest(path: str) -> str:
+    """Content digest of an auxiliary input file ('' when absent)."""
+    try:
+        with open(path, "rb") as f:
+            return hashlib.sha256(f.read()).hexdigest()
+    except OSError:
+        return ""
+
+
+def workload_to_dict(spec: WorkloadSpec) -> Dict[str, Any]:
+    """All WorkloadSpec fields, fully resolved (defaults included).
+
+    Resolving defaults into the cell means the hash captures the *values* the
+    simulation saw — a changed default can never alias a stale cache entry.
+    """
+    return dataclasses.asdict(spec)
+
+
+def make_cell(
+    *,
+    experiment: str,
+    group: str,
+    scheduler: str,
+    workload: WorkloadSpec,
+    seed: int,
+    policy: str = "static",
+    policy_kwargs: Optional[Mapping[str, Any]] = None,
+    mig_enabled: bool = True,
+) -> Cell:
+    policy_kwargs = dict(policy_kwargs or {})
+    # Policies that load weights from disk are only content-addressable if the
+    # weights themselves enter the hash: a retrained checkpoint at the same
+    # path must miss the cache, not silently serve stale results.
+    if "params_path" in policy_kwargs:
+        policy_kwargs["_params_digest"] = file_digest(policy_kwargs["params_path"])
+    return {
+        "experiment": experiment,
+        "group": group,
+        "scheduler": scheduler,
+        "policy": policy,
+        "policy_kwargs": policy_kwargs,
+        "workload": workload_to_dict(workload),
+        "seed": int(seed),
+        "mig_enabled": bool(mig_enabled),
+    }
+
+
+def canonical_json(obj: Any) -> str:
+    """Byte-stable JSON: sorted keys, no whitespace, repr round-trip floats."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+#: cell keys that label the grid rather than the simulation — excluded from
+#: the hash so identical physics shares one cache entry across experiments.
+_META_KEYS = frozenset({"experiment", "group"})
+
+
+def cell_hash(cell: Cell, sim_version: str = SIM_VERSION) -> str:
+    physics = {k: v for k, v in cell.items() if k not in _META_KEYS}
+    payload = canonical_json({"cell": physics, "sim_version": sim_version})
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()
+
+
+# ----------------------------------------------------------------------
+# execution
+
+def run_cell(
+    cell: Cell,
+    policy_factory: Optional[Callable[[], RepartitionPolicy]] = None,
+) -> Dict[str, Any]:
+    """Execute one cell; returns a JSON-serializable result dict.
+
+    ``policy_factory`` overrides the registry lookup for in-process runs with
+    unpicklable ad-hoc policies (e.g. a live DQN agent mid-training); such
+    cells bypass the cache at the runner layer.
+    """
+    spec = WorkloadSpec(**cell["workload"])
+    jobs = generate_jobs(spec, seed=cell["seed"])
+    if policy_factory is not None:
+        policy = policy_factory()
+    else:
+        policy = make_policy(cell["policy"], cell.get("policy_kwargs"))
+    sim = MIGSimulator(
+        make_scheduler(cell["scheduler"]), mig_enabled=cell["mig_enabled"]
+    )
+    t0 = time.perf_counter()
+    res = sim.run(jobs, policy=policy)
+    out = {
+        "energy_wh": res.energy_wh,
+        "avg_tardiness": res.avg_tardiness,
+        "num_jobs": res.num_jobs,
+        "total_tardiness": res.total_tardiness,
+        "preemptions": res.preemptions,
+        "repartitions": res.repartitions,
+        "max_tardiness": res.max_tardiness,
+        "deadline_misses": res.deadline_misses,
+        "busy_slot_minutes": res.busy_slot_minutes,
+        "extra": dict(res.extra),
+        # side-channel state some figures aggregate over:
+        "util_histogram": {str(k): v for k, v in sim.util_histogram.items()},
+        "config_trace": [[t, c] for t, c in sim.config_trace],
+        "elapsed_s": time.perf_counter() - t0,
+    }
+    return out
+
+
+_RESULT_FIELDS = (
+    "energy_wh",
+    "avg_tardiness",
+    "num_jobs",
+    "total_tardiness",
+    "preemptions",
+    "repartitions",
+    "max_tardiness",
+    "deadline_misses",
+    "busy_slot_minutes",
+)
+
+
+def result_to_sim_result(result: Mapping[str, Any]) -> SimResult:
+    """Reconstruct the :class:`SimResult` a cell's simulator run returned."""
+    return SimResult(
+        **{k: result[k] for k in _RESULT_FIELDS}, extra=dict(result["extra"])
+    )
+
+
+def group_results(
+    cells: Sequence[Cell], results: Sequence[Mapping[str, Any]]
+) -> Dict[str, List[SimResult]]:
+    """Bucket per-cell results by ``cell['group']``, preserving cell order.
+
+    Order preservation matters: float summation is order-sensitive, and the
+    legacy serial benchmarks accumulated results in grid order — grouping in
+    the same order keeps aggregate numbers bit-identical to the serial path.
+    """
+    out: Dict[str, List[SimResult]] = {}
+    for cell, result in zip(cells, results):
+        out.setdefault(cell["group"], []).append(result_to_sim_result(result))
+    return out

@@ -1,0 +1,431 @@
+"""Declarative sweep grids for the paper's tables and figures.
+
+Each grid is a :class:`GridDef`: ``build(scale)`` enumerates the cells
+(policy x scheduler x config x WorkloadSpec x seed) and ``aggregate``
+reduces per-cell results to the table's rows.  ``benchmarks/paper_tables.py``
+is a thin wrapper over this registry; the CLI (``python -m repro.sweep``)
+runs the same grids directly.
+
+Cell enumeration order is load-bearing: float accumulation is
+order-sensitive, and these builders walk the exact nested-loop order of the
+original serial benchmarks so the sweep path reproduces their numbers
+bit-for-bit at any worker count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.metrics import SimResult, et_table
+from repro.core.workload import WorkloadSpec
+from repro.sweep.cells import Cell, group_results, make_cell, result_to_sim_result
+from repro.sweep.runner import DEFAULT_ARTIFACTS_DIR, SweepOutcome, run_cells
+
+__all__ = ["GridDef", "GRIDS", "run_grid", "summarize_results", "DQN_PARAMS_PATH"]
+
+ALGOS = ["EDF-FS", "EDF-SS", "LLF", "LALF"]
+DQN_PARAMS_PATH = os.path.join("artifacts", "dqn_params.npz")
+
+Rows = List[Dict[str, Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridDef:
+    name: str
+    doc: str
+    build: Callable[[float], List[Cell]]
+    aggregate: Callable[[List[Cell], List[Dict[str, Any]]], Rows]
+
+
+def summarize_results(results: Sequence[SimResult]) -> Dict[str, float]:
+    """Mean of the headline per-run metrics (matches Tables II/III columns)."""
+    n = max(len(results), 1)
+    return {
+        "energy_wh": sum(r.energy_wh for r in results) / n,
+        "avg_tardiness": sum(r.avg_tardiness for r in results) / n,
+        "preemptions": sum(r.preemptions for r in results) / n,
+        "repartitions": sum(r.repartitions for r in results) / n,
+        "deadline_misses": sum(r.deadline_misses for r in results) / n,
+    }
+
+
+def _basket_specs() -> List[WorkloadSpec]:
+    """The Table II experiment basket (§V-B)."""
+    return [
+        WorkloadSpec(),
+        WorkloadSpec(horizon_min=480.0, constant_rate=0.1),
+        WorkloadSpec(horizon_min=480.0, constant_rate=0.5),
+        WorkloadSpec(inference_split=0.2),
+    ]
+
+
+def _iters(base: int, scale: float, floor: int = 1) -> int:
+    return max(int(base * scale), floor)
+
+
+# ----------------------------------------------------------------------
+# Table II
+
+
+def _table2_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for si, spec in enumerate(_basket_specs()):
+        for cfg in range(1, 13):
+            for n in ALGOS:
+                for k in range(iters):
+                    cells.append(
+                        make_cell(
+                            experiment="table2_schedulers",
+                            group=n,
+                            scheduler=n,
+                            workload=spec,
+                            seed=9000 * si + 17 * cfg + k,
+                            policy="static",
+                            policy_kwargs={"config_id": cfg},
+                        )
+                    )
+    return cells
+
+
+def _table2_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    per = group_results(cells, results)
+    table, _a = et_table(per)
+    return [
+        {"algorithm": n, "ET": table[n], **summarize_results(per[n])} for n in ALGOS
+    ]
+
+
+# ----------------------------------------------------------------------
+# Fig. 4 — restricted vs unrestricted EDF-SS preemptions, per config
+
+
+def _fig4_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    spec = WorkloadSpec()
+    cells: List[Cell] = []
+    for cfg in range(1, 13):
+        for n in ("EDF-SS", "EDF-SS-unrestricted"):
+            for k in range(iters):
+                cells.append(
+                    make_cell(
+                        experiment="fig4_preemption",
+                        group=f"cfg{cfg}:{n}",
+                        scheduler=n,
+                        workload=spec,
+                        seed=100 * cfg + k,
+                        policy="static",
+                        policy_kwargs={"config_id": cfg},
+                    )
+                )
+    return cells
+
+
+def _fig4_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for cfg in range(1, 13):
+        rec: Dict[str, Any] = {"config": cfg}
+        per = {n: grouped[f"cfg{cfg}:{n}"] for n in ("EDF-SS", "EDF-SS-unrestricted")}
+        for n, rs in per.items():
+            key = "restricted" if n == "EDF-SS" else "unrestricted"
+            rec[f"preempt_{key}"] = sum(r.preemptions for r in rs) / len(rs)
+        t, _ = et_table(per)
+        rec["et_restricted"] = t["EDF-SS"]
+        rec["et_unrestricted"] = t["EDF-SS-unrestricted"]
+        rec["reduction_pct"] = 100.0 * (
+            1 - rec["preempt_restricted"] / max(rec["preempt_unrestricted"], 1e-9)
+        )
+        rows.append(rec)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# Fig. 6 — utilization histogram per algorithm
+
+
+def _fig6_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    spec = WorkloadSpec(horizon_min=480.0, constant_rate=0.5)
+    return [
+        make_cell(
+            experiment="fig6_utilization",
+            group=n,
+            scheduler=n,
+            workload=spec,
+            seed=600 + s,
+            policy="static",
+            policy_kwargs={"config_id": 4},
+        )
+        for n in ALGOS
+        for s in range(iters)
+    ]
+
+
+def _fig6_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    rows: Rows = []
+    for n in ALGOS:
+        hist: Dict[int, float] = {}
+        total = 0.0
+        for cell, result in zip(cells, results):
+            if cell["group"] != n:
+                continue
+            for k, v in result["util_histogram"].items():
+                k = int(k)
+                hist[k] = hist.get(k, 0.0) + v
+                total += v
+        row: Dict[str, Any] = {"algorithm": n}
+        for k in range(8):
+            row[f"util_{k}"] = 100.0 * hist.get(k, 0.0) / max(total, 1e-9)
+        rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# Figs. 7-10 — ET per configuration across arrival rates / inference splits
+
+
+def _sweep_spec_cells(
+    experiment: str, specs: List[Tuple[Any, WorkloadSpec]], seed_base: int, scale: float
+) -> List[Cell]:
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for label, spec in specs:
+        for cfg in range(1, 13):
+            for n in ALGOS:
+                for k in range(iters):
+                    cells.append(
+                        make_cell(
+                            experiment=experiment,
+                            group=f"{label}:cfg{cfg}:{n}",
+                            scheduler=n,
+                            workload=spec,
+                            seed=seed_base * cfg + k,
+                            policy="static",
+                            policy_kwargs={"config_id": cfg},
+                        )
+                    )
+    return cells
+
+
+def _sweep_spec_aggregate(
+    cells: List[Cell],
+    results: List[Dict[str, Any]],
+    labels: List[Tuple[Any, str]],
+) -> Rows:
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for label, column in labels:
+        for cfg in range(1, 13):
+            per = {n: grouped[f"{label}:cfg{cfg}:{n}"] for n in ALGOS}
+            t, _ = et_table(per)
+            rows.append({column: label, "config": cfg, **{n: t[n] for n in ALGOS}})
+    return rows
+
+
+_FIG7_RATES = (0.1, 0.5, 0.75)
+_FIG9_SPLITS = (0.2, 0.8)
+
+
+def _fig7_cells(scale: float) -> List[Cell]:
+    specs = [
+        (rate, WorkloadSpec(horizon_min=480.0, constant_rate=rate))
+        for rate in _FIG7_RATES
+    ]
+    return _sweep_spec_cells("fig7_fig8_arrival", specs, 300, scale)
+
+
+def _fig7_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    return _sweep_spec_aggregate(
+        cells, results, [(rate, "rate") for rate in _FIG7_RATES]
+    )
+
+
+def _fig9_cells(scale: float) -> List[Cell]:
+    specs = [
+        (split, WorkloadSpec(inference_split=split)) for split in _FIG9_SPLITS
+    ]
+    return _sweep_spec_cells("fig9_fig10_split", specs, 500, scale)
+
+
+def _fig9_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    return _sweep_spec_aggregate(
+        cells, results, [(split, "inference_split") for split in _FIG9_SPLITS]
+    )
+
+
+# ----------------------------------------------------------------------
+# Table III — repartitioning models
+
+
+def _table3_models(include_dqn: Optional[bool] = None) -> List[Tuple[str, Dict[str, Any]]]:
+    """(model name, cell overrides) in Table III row order."""
+    models: List[Tuple[str, Dict[str, Any]]] = [
+        ("NoMIG", {"policy": "nomig", "mig_enabled": False}),
+        ("StaticMIG", {"policy": "static", "policy_kwargs": {"config_id": 3}}),
+        ("DayNightMIG", {"policy": "daynight"}),
+        ("DynamicMIG-heuristic", {"policy": "heuristic"}),
+    ]
+    if include_dqn is None:
+        include_dqn = os.path.exists(DQN_PARAMS_PATH)
+    if include_dqn:
+        models.append(
+            ("DynamicMIG-DQN", {"policy": "dqn", "policy_kwargs": {"params_path": DQN_PARAMS_PATH}})
+        )
+    return models
+
+
+def _table3_cells(scale: float) -> List[Cell]:
+    iters = _iters(10, scale, floor=2)
+    spec = WorkloadSpec()
+    seeds = [40_000 + k for k in range(iters)]
+    cells: List[Cell] = []
+    for name, overrides in _table3_models():
+        for s in seeds:
+            cells.append(
+                make_cell(
+                    experiment="table3_repartitioning",
+                    group=name,
+                    scheduler="EDF-SS",
+                    workload=spec,
+                    seed=s,
+                    **overrides,
+                )
+            )
+    return cells
+
+
+def _table3_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    per = group_results(cells, results)
+    table, _a = et_table(per)
+    rows: Rows = []
+    for name in per:
+        s = summarize_results(per[name])
+        rows.append(
+            {
+                "model": name,
+                "ET": table[name],
+                "improvement_vs_NoMIG_pct": 100 * (1 - table[name] / table["NoMIG"]),
+                **s,
+            }
+        )
+    return rows
+
+
+# ----------------------------------------------------------------------
+# Fig. 11 — preferred configurations per 4h interval under the dynamic policy
+
+
+def _fig11_policy() -> Dict[str, Any]:
+    if os.path.exists(DQN_PARAMS_PATH):
+        return {"policy": "dqn", "policy_kwargs": {"params_path": DQN_PARAMS_PATH}}
+    return {"policy": "heuristic"}
+
+
+def _fig11_cells(scale: float) -> List[Cell]:
+    iters = _iters(6, scale, floor=2)
+    spec = WorkloadSpec()
+    overrides = _fig11_policy()
+    return [
+        make_cell(
+            experiment="fig11_preferences",
+            group="dynamic",
+            scheduler="EDF-SS",
+            workload=spec,
+            seed=77_000 + s,
+            **overrides,
+        )
+        for s in range(iters)
+    ]
+
+
+def _fig11_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    occupancy: Dict[int, Dict[int, float]] = {b: {} for b in range(6)}
+    for result in results:
+        trace = [(t, int(c)) for t, c in result["config_trace"]]
+        trace = trace + [(24 * 60.0, trace[-1][1])]
+        for (t0, c), (t1, _) in zip(trace, trace[1:]):
+            t0c, t1c = min(t0, 1440.0), min(t1, 1440.0)
+            while t0c < t1c:
+                b = int(t0c // 240) % 6
+                upper = min((int(t0c // 240) + 1) * 240.0, t1c)
+                occupancy[b][c] = occupancy[b].get(c, 0.0) + (upper - t0c)
+                t0c = upper
+    rows: Rows = []
+    for b in range(6):
+        tot = sum(occupancy[b].values()) or 1.0
+        row: Dict[str, Any] = {"interval": f"{b*4:02d}:00-{b*4+4:02d}:00"}
+        for c in range(1, 13):
+            row[f"cfg{c}_pct"] = 100.0 * occupancy[b].get(c, 0.0) / tot
+        rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# smoke — a compact CI grid (subset of the Table II basket)
+
+
+def _smoke_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    specs = [WorkloadSpec(), WorkloadSpec(horizon_min=480.0, constant_rate=0.5)]
+    cells: List[Cell] = []
+    for si, spec in enumerate(specs):
+        for cfg in (1, 3, 6, 12):
+            for n in ALGOS:
+                for k in range(iters):
+                    cells.append(
+                        make_cell(
+                            experiment="smoke",
+                            group=n,
+                            scheduler=n,
+                            workload=spec,
+                            seed=1000 * si + 17 * cfg + k,
+                            policy="static",
+                            policy_kwargs={"config_id": cfg},
+                        )
+                    )
+    return cells
+
+
+GRIDS: Dict[str, GridDef] = {
+    g.name: g
+    for g in [
+        GridDef("table2_schedulers", "Table II: ET of the four schedulers", _table2_cells, _table2_aggregate),
+        GridDef("fig4_preemption", "Fig. 4: restricted vs unrestricted EDF-SS", _fig4_cells, _fig4_aggregate),
+        GridDef("fig6_utilization", "Fig. 6: utilization histogram per algorithm", _fig6_cells, _fig6_aggregate),
+        GridDef("fig7_fig8_arrival", "Figs. 7-8: ET per config across arrival rates", _fig7_cells, _fig7_aggregate),
+        GridDef("fig9_fig10_split", "Figs. 9-10: ET per config across inference splits", _fig9_cells, _fig9_aggregate),
+        GridDef("table3_repartitioning", "Table III: repartitioning models", _table3_cells, _table3_aggregate),
+        GridDef("fig11_preferences", "Fig. 11: preferred configs per 4h interval", _fig11_cells, _fig11_aggregate),
+        GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),
+    ]
+}
+
+
+def run_grid(
+    name: str,
+    *,
+    scale: float = 1.0,
+    workers: int = 0,
+    cache: Any = True,
+    resume: bool = True,
+    artifacts_dir: Optional[str] = DEFAULT_ARTIFACTS_DIR,
+    progress: Optional[Callable[[str], None]] = None,
+) -> Tuple[Rows, SweepOutcome]:
+    """Run a named grid end-to-end; returns (table rows, sweep outcome)."""
+    if name not in GRIDS:
+        raise KeyError(f"unknown grid {name!r}; available: {sorted(GRIDS)}")
+    grid = GRIDS[name]
+    cells = grid.build(scale)
+    outcome = run_cells(
+        name,
+        cells,
+        workers=workers,
+        cache=cache,
+        resume=resume,
+        artifacts_dir=artifacts_dir,
+        progress=progress,
+    )
+    return grid.aggregate(outcome.cells, outcome.results), outcome

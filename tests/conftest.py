@@ -1,8 +1,39 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
-only launch/dryrun.py (its own process) forces 512 host devices."""
+only launch/dryrun.py (its own process) forces 512 host devices.
+
+Hypothesis shim: ``hypothesis`` is a declared test dependency, but hermetic
+environments that only bake the runtime toolchain may lack it.  Rather than
+letting five test files die at collection, install the deterministic stub
+from ``tests/_hypothesis_stub.py`` (boundary values + seeded random draws).
+The real package always wins when importable.
+"""
+
+import importlib.util
+import os
+import sys
 
 import numpy as np
 import pytest
+
+
+def _ensure_hypothesis() -> None:
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+    path = os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["hypothesis"] = mod
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_ensure_hypothesis()
 
 
 @pytest.fixture

@@ -66,6 +66,7 @@ def test_cluster_jobs_generation():
         assert j.work > 0 and j.deadline > j.arrival
 
 
+@pytest.mark.slow
 def test_dynamic_beats_static_on_cluster():
     per = {
         "static": run_days(lambda: StaticPolicy(3), iterations=3),
@@ -75,6 +76,7 @@ def test_dynamic_beats_static_on_cluster():
     assert table["dyn"] < table["static"]
 
 
+@pytest.mark.slow
 def test_failure_injection_degrades_but_completes():
     fm = FailureModel(mtbf_minutes=8 * 60.0, seed=3)
     ok = run_days(queue_heuristic_policy, iterations=2, seed=5)

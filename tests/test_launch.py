@@ -7,6 +7,7 @@ import pytest
 from repro.launch.shapes import SHAPES, accum_steps_for, all_cells, cell_applicable
 
 
+@pytest.mark.slow
 def test_train_driver_reduces_loss(tmp_path):
     from repro.launch.train import train
 
@@ -29,6 +30,7 @@ def test_train_driver_reduces_loss(tmp_path):
     assert latest_step(str(tmp_path)) == 40
 
 
+@pytest.mark.slow
 def test_serve_driver_runs():
     from repro.launch.serve import serve
 

@@ -61,6 +61,7 @@ def test_replay_buffer_wraps():
     assert s.shape == (16, 3) and r.min() >= 12.0  # only recent entries remain
 
 
+@pytest.mark.slow
 def test_dqn_learns_trivial_contextual_bandit():
     """Q-learning sanity: reward = 1 if action == argmax(state) else 0."""
     cfg = DQNConfig(state_dim=4, num_actions=4, hidden=(32, 32), lr=3e-3,

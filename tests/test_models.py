@@ -36,6 +36,7 @@ def _batch(cfg, B, S):
 
 
 @pytest.mark.parametrize("name", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_forward_loss_decode(name):
     cfg = smoke_config(name)
     params = init_params(cfg, seed=0)

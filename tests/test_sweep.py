@@ -1,0 +1,252 @@
+"""Sweep engine: hashing determinism, cache behavior, worker independence."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import MIGSimulator, StaticPolicy
+from repro.core.workload import WorkloadSpec, generate_jobs
+from repro.sweep import (
+    GRIDS,
+    SweepCache,
+    cell_hash,
+    make_cell,
+    result_to_sim_result,
+    run_cell,
+    run_cells,
+    run_grid,
+)
+
+TINY = WorkloadSpec(horizon_min=90.0, constant_rate=0.2)
+
+
+def _tiny_cells(n_seeds=4, experiment="t", group="EDF-SS"):
+    return [
+        make_cell(
+            experiment=experiment,
+            group=group,
+            scheduler="EDF-SS",
+            workload=TINY,
+            seed=s,
+            policy="static",
+            policy_kwargs={"config_id": 3},
+        )
+        for s in range(n_seeds)
+    ]
+
+
+# ----------------------------------------------------------------------
+# hashing
+
+
+def test_cell_hash_deterministic_and_content_addressed():
+    a, b = _tiny_cells(1)[0], _tiny_cells(1)[0]
+    assert cell_hash(a) == cell_hash(b)
+    c = dict(a, seed=99)
+    assert cell_hash(c) != cell_hash(a)
+    d = dict(a, scheduler="LLF")
+    assert cell_hash(d) != cell_hash(a)
+    e = dict(a, policy_kwargs={"config_id": 4})
+    assert cell_hash(e) != cell_hash(a)
+
+
+def test_dqn_cells_hash_weights_content_not_just_path(tmp_path):
+    params = tmp_path / "dqn_params.npz"
+    params.write_bytes(b"weights-v1")
+    kw = {"params_path": str(params)}
+    cell_v1 = make_cell(
+        experiment="t", group="dqn", scheduler="EDF-SS", workload=TINY,
+        seed=0, policy="dqn", policy_kwargs=kw,
+    )
+    params.write_bytes(b"weights-v2-retrained")
+    cell_v2 = make_cell(
+        experiment="t", group="dqn", scheduler="EDF-SS", workload=TINY,
+        seed=0, policy="dqn", policy_kwargs=kw,
+    )
+    assert cell_hash(cell_v1) != cell_hash(cell_v2), (
+        "retrained weights at the same path must invalidate the cache"
+    )
+    # the digest is a hash-only annotation; factories never see it
+    from repro.sweep import make_policy
+
+    assert make_policy("static", {"config_id": 2, "_params_digest": "x"}).initial_config == 2
+
+
+def test_cell_hash_ignores_grid_labels_but_not_sim_version():
+    a = _tiny_cells(1, experiment="x", group="g1")[0]
+    b = _tiny_cells(1, experiment="y", group="g2")[0]
+    assert cell_hash(a) == cell_hash(b)  # same physics, different labels
+    assert cell_hash(a, sim_version="other") != cell_hash(a)
+
+
+# ----------------------------------------------------------------------
+# run_cell matches a direct simulator run
+
+
+def test_run_cell_matches_direct_simulation():
+    cell = _tiny_cells(1)[0]
+    got = result_to_sim_result(run_cell(cell))
+    sim = MIGSimulator(make_scheduler("EDF-SS"))
+    want = sim.run(generate_jobs(TINY, seed=0), policy=StaticPolicy(3))
+    assert got.energy_wh == want.energy_wh
+    assert got.avg_tardiness == want.avg_tardiness
+    assert got.preemptions == want.preemptions
+    assert got.num_jobs == want.num_jobs
+    assert got.extra["makespan_min"] == want.extra["makespan_min"]
+
+
+# ----------------------------------------------------------------------
+# cache
+
+
+def test_cache_hit_miss_and_resume(tmp_path):
+    cache_dir = str(tmp_path / "cache")
+    cells = _tiny_cells(3)
+
+    out1 = run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    assert (out1.cached_count, out1.computed_count) == (0, 3)
+
+    out2 = run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    assert (out2.cached_count, out2.computed_count) == (3, 0)
+    assert out2.results == out1.results
+
+    # --no-resume recomputes but results stay identical
+    out3 = run_cells("t", cells, cache=cache_dir, resume=False, artifacts_dir=None)
+    assert (out3.cached_count, out3.computed_count) == (0, 3)
+    assert out3.results == out1.results
+
+    # a new cell is a miss; old cells still hit
+    out4 = run_cells("t", _tiny_cells(4), cache=cache_dir, artifacts_dir=None)
+    assert (out4.cached_count, out4.computed_count) == (3, 1)
+
+
+def test_cache_rejects_torn_and_foreign_entries(tmp_path):
+    cache = SweepCache(str(tmp_path))
+    cell = _tiny_cells(1)[0]
+    h = cell_hash(cell)
+    assert cache.get(h) is None  # miss on empty
+
+    cache.put(h, cell, {"energy_wh": 1.0})
+    assert cache.get(h) == {"energy_wh": 1.0}
+
+    # torn write -> treated as a miss, not a crash
+    with open(os.path.join(str(tmp_path), f"{h}.json"), "w") as f:
+        f.write('{"sim_version": "mig-sim')
+    assert cache.get(h) is None
+
+    # entry from a different simulator version -> miss
+    with open(os.path.join(str(tmp_path), f"{h}.json"), "w") as f:
+        json.dump({"sim_version": "ancient", "cell": cell, "result": {}}, f)
+    assert cache.get(h) is None
+
+
+def test_ad_hoc_policy_bypasses_cache(tmp_path):
+    cache_dir = str(tmp_path / "cache")
+    cells = _tiny_cells(2)
+    out = run_cells(
+        "t", cells, cache=cache_dir, artifacts_dir=None,
+        policy_factory=lambda: StaticPolicy(3),
+    )
+    assert out.computed_count == 2
+    assert len(SweepCache(cache_dir)) == 0  # nothing persisted
+
+
+# ----------------------------------------------------------------------
+# worker-count independence + artifacts
+
+
+def test_worker_count_independence_and_jsonl_artifact(tmp_path):
+    cells = [
+        make_cell(
+            experiment="t",
+            group=n,
+            scheduler=n,
+            workload=TINY,
+            seed=s,
+            policy="static",
+            policy_kwargs={"config_id": cfg},
+        )
+        for n in ("EDF-SS", "LLF")
+        for cfg in (2, 3)
+        for s in range(2)
+    ]
+    a1 = str(tmp_path / "a1")
+    a4 = str(tmp_path / "a4")
+    out1 = run_cells("grid", cells, workers=1, cache=False, artifacts_dir=a1)
+    out4 = run_cells("grid", cells, workers=4, cache=False, artifacts_dir=a4)
+
+    assert out1.results == out4.results
+    b1 = open(os.path.join(a1, "grid.jsonl"), "rb").read()
+    b4 = open(os.path.join(a4, "grid.jsonl"), "rb").read()
+    assert b1 == b4, "JSONL artifact must not depend on worker count"
+
+    lines = [json.loads(x) for x in b1.decode().splitlines()]
+    assert len(lines) == len(cells)
+    assert all(set(rec) == {"hash", "cell", "result"} for rec in lines)
+    # grid order is preserved
+    assert [rec["cell"]["seed"] for rec in lines] == [c["seed"] for c in cells]
+    # volatile timing never leaks into the artifact
+    assert all("elapsed_s" not in rec["result"] for rec in lines)
+
+
+def test_parallel_failure_reports_cell(tmp_path):
+    bad = _tiny_cells(2)
+    bad[1]["policy"] = "nonexistent-policy"
+    with pytest.raises(Exception, match="nonexistent-policy"):
+        run_cells("t", bad, workers=2, cache=False, artifacts_dir=None)
+
+
+# ----------------------------------------------------------------------
+# baseline gate (CI)
+
+
+def test_check_baseline_detects_drift(tmp_path):
+    from repro.sweep.__main__ import check_baseline
+
+    cells = _tiny_cells(2)
+    out = run_cells("base", cells, cache=False, artifacts_dir=str(tmp_path))
+    baseline = str(tmp_path / "baseline.jsonl")
+    import shutil
+
+    shutil.copy(out.jsonl_path, baseline)
+    assert check_baseline(out.jsonl_path, baseline, rtol=1e-9) == 0
+
+    # perturb one result -> exactly one mismatch
+    lines = [json.loads(x) for x in open(baseline)]
+    lines[0]["result"]["energy_wh"] *= 1.001
+    with open(baseline, "w") as f:
+        for rec in lines:
+            f.write(json.dumps(rec) + "\n")
+    assert check_baseline(out.jsonl_path, baseline, rtol=1e-9) == 1
+    # ...which a loose tolerance forgives
+    assert check_baseline(out.jsonl_path, baseline, rtol=0.01) == 0
+
+
+# ----------------------------------------------------------------------
+# grids registry
+
+
+def test_grids_build_and_smoke_aggregates(tmp_path):
+    for name, grid in GRIDS.items():
+        cells = grid.build(0.1)
+        assert cells, name
+        hashes = {cell_hash(c) for c in cells}
+        assert len(hashes) == len(cells), f"{name}: duplicate cells"
+
+    rows, outcome = run_grid(
+        "smoke", scale=0.05, workers=0,
+        cache=str(tmp_path / "c"), artifacts_dir=str(tmp_path / "a"),
+    )
+    assert [r["algorithm"] for r in rows] == ["EDF-FS", "EDF-SS", "LLF", "LALF"]
+    assert all(r["ET"] >= 0 for r in rows)
+    assert os.path.exists(outcome.jsonl_path)
+
+    # warm rerun serves everything from cache
+    rows2, outcome2 = run_grid(
+        "smoke", scale=0.05, workers=0,
+        cache=str(tmp_path / "c"), artifacts_dir=str(tmp_path / "a"),
+    )
+    assert rows2 == rows
+    assert outcome2.computed_count == 0

@@ -11,6 +11,9 @@ These assert the paper's HEADLINE CLAIMS hold in this reproduction:
 import pytest
 
 from repro.core.metrics import et_table
+
+# full-day ET batteries across the whole config grid: minutes, not seconds
+pytestmark = pytest.mark.slow
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import (
     DayNightPolicy,
