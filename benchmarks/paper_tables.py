@@ -57,3 +57,13 @@ def table3_repartitioning(scale: float = 1.0, workers: int = 0) -> List[Dict]:
 def fig11_preferences(scale: float = 1.0, workers: int = 0) -> List[Dict]:
     """Fig. 11: preferred configurations by 4-hour interval (dynamic policy)."""
     return _grid_bench("fig11_preferences", scale, workers)
+
+
+def fleet_scaling(scale: float = 1.0, workers: int = 0) -> List[Dict]:
+    """Beyond-paper: N heterogeneous GPUs x dispatcher (repro.fleet)."""
+    return _grid_bench("fleet_scaling", scale, workers)
+
+
+def scenario_matrix(scale: float = 1.0, workers: int = 0) -> List[Dict]:
+    """Beyond-paper: scenario library x the four schedulers."""
+    return _grid_bench("scenario_matrix", scale, workers)

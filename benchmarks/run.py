@@ -29,6 +29,8 @@ def main() -> None:
         fig7_fig8_arrival,
         fig9_fig10_split,
         fig11_preferences,
+        fleet_scaling,
+        scenario_matrix,
         table2_schedulers,
         table3_repartitioning,
     )
@@ -43,6 +45,8 @@ def main() -> None:
         "fig9_fig10_split": fig9_fig10_split,
         "table3_repartitioning": table3_repartitioning,
         "fig11_preferences": fig11_preferences,
+        "fleet_scaling": fleet_scaling,
+        "scenario_matrix": scenario_matrix,
     }
     benches = {
         **sweep_benches,

@@ -1,0 +1,104 @@
+"""Append one perf/metrics trajectory entry to BENCH_nightly.json.
+
+The nightly workflow runs the slow test tier plus the full smoke + fleet +
+scenario sweeps, then calls this script.  It collects the per-grid sidecar
+metadata the sweep runner leaves next to each JSONL artifact
+(``artifacts/sweeps/<grid>.meta.json``: wall-clock, cell counts, cache
+hits) into a single dated entry and appends it to the trajectory file, so
+regressions in sweep wall-clock or cache hit rate show up as a time series
+rather than a one-off log line.
+
+::
+
+    python scripts/bench_nightly.py                       # append an entry
+    python scripts/bench_nightly.py --dry-run             # print, don't write
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_OUT = "BENCH_nightly.json"
+DEFAULT_SWEEPS_DIR = os.path.join("artifacts", "sweeps")
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True, check=True
+            ).stdout.strip()
+        )
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
+    grids = {}
+    for meta_path in sorted(glob.glob(os.path.join(sweeps_dir, "*.meta.json"))):
+        with open(meta_path) as f:
+            meta = json.load(f)
+        cells = max(int(meta.get("cells", 0)), 1)
+        grids[meta["name"]] = {
+            "wall_s": round(float(meta.get("wall_s", 0.0)), 3),
+            "cells": meta.get("cells", 0),
+            "cached": meta.get("cached", 0),
+            "computed": meta.get("computed", 0),
+            "cache_hit_rate": round(float(meta.get("cached", 0)) / cells, 4),
+            "workers": meta.get("workers", 0),
+        }
+    try:
+        from repro.core.simulator import SIM_VERSION
+    except ImportError:  # pragma: no cover - script usable without install
+        SIM_VERSION = "unknown"
+    return {
+        "date": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
+        "git_sha": _git_sha(),
+        "sim_version": SIM_VERSION,
+        "grids": grids,
+        "total_wall_s": round(sum(g["wall_s"] for g in grids.values()), 3),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--sweeps-dir", default=DEFAULT_SWEEPS_DIR)
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+
+    entry = collect_entry(args.sweeps_dir)
+    if not entry["grids"]:
+        print(f"no sweep metadata under {args.sweeps_dir}; nothing to record",
+              file=sys.stderr)
+        return 1
+    if args.dry_run:
+        print(json.dumps(entry, indent=2))
+        return 0
+
+    trajectory = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            trajectory = json.load(f)
+        if not isinstance(trajectory, list):
+            raise SystemExit(f"{args.out} is not a JSON list")
+    trajectory.append(entry)
+    with open(args.out, "w") as f:
+        json.dump(trajectory, f, indent=2)
+        f.write("\n")
+    print(f"appended entry #{len(trajectory)} to {args.out} "
+          f"({len(entry['grids'])} grids, {entry['total_wall_s']}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@ Layers:
 * :mod:`repro.core.power`      — Fig. 3 saturating power curves
 * :mod:`repro.core.jobs`       — jobs with linear/capped/sublinear elasticity
 * :mod:`repro.core.workload`   — §V-A diurnal Poisson workload generator
+* :mod:`repro.core.scenarios`  — named workload scenario registry
 * :mod:`repro.core.metrics`    — §IV-A ET multi-objective metric
 * :mod:`repro.core.schedulers` — §IV-C EDF-FS / EDF-SS / LLF / LALF
 * :mod:`repro.core.simulator`  — event-driven preemptive simulator
@@ -16,6 +17,7 @@ from repro.core.slices import MIG_CONFIGS, NUM_CONFIGS, Partition, SliceType, co
 from repro.core.power import A100_250W, TPU_V5E_POD, PowerModel
 from repro.core.jobs import Elasticity, ElasticityClass, Job, JobKind
 from repro.core.workload import WorkloadSpec, generate_jobs, arrival_rate
+from repro.core.scenarios import SCENARIOS, generate_scenario, scenario_names
 from repro.core.metrics import SimResult, et_metric, et_scale_factor, et_table
 from repro.core.schedulers import (
     SCHEDULERS,
@@ -50,6 +52,9 @@ __all__ = [
     "WorkloadSpec",
     "generate_jobs",
     "arrival_rate",
+    "SCENARIOS",
+    "generate_scenario",
+    "scenario_names",
     "SimResult",
     "et_metric",
     "et_scale_factor",

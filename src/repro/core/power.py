@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence, Tuple
 
-__all__ = ["PowerModel", "A100_250W", "TPU_V5E_POD", "make_saturating_power"]
+__all__ = ["PowerModel", "A100_250W", "A30_165W", "TPU_V5E_POD", "make_saturating_power"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +99,17 @@ def make_saturating_power(
         watts[i] = max(watts[i], watts[i - 1])
     watts[-1] = max(watts[-1], peak_watts)
     return PowerModel(name=name, watts_by_busy_slots=tuple(watts), total_slots=total_slots)
+
+
+# A30-class fleet profile (24GB, 165 W TDP, 4 MIG compute slots): Fig. 3 was
+# only measured on the A100, so we reuse its saturating shape at A30 scale —
+# idle ~30 W, steep marginal power to the knee, near-flat after.
+A30_165W = make_saturating_power(
+    name="a30-24gb-165w",
+    idle_watts=30.0,
+    peak_watts=165.0,
+    total_slots=4,
+)
 
 
 # TPU v5e pod adaptation: 256 chips grouped into 7 "slots" of ~36 chips.

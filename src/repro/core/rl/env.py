@@ -21,8 +21,17 @@ import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import MIGSimulator
+    from repro.fleet.simulator import FleetView
 
-__all__ = ["M_JOBS", "FEATURE_DIM", "state_features", "RewardWeights"]
+__all__ = [
+    "M_JOBS",
+    "FEATURE_DIM",
+    "FLEET_EXTRA_FEATURES",
+    "FLEET_FEATURE_DIM",
+    "state_features",
+    "fleet_state_features",
+    "RewardWeights",
+]
 
 # The paper uses m=3, chosen "based on an analysis of typical GPU loads in
 # Alibaba's data center traces" (§IV-D-1).  Our §V-A calibration produces
@@ -60,6 +69,35 @@ def state_features(t: float, sim: "MIGSimulator", m: int = M_JOBS) -> np.ndarray
             feats.append(1.0)  # "no job" sentinel: max slack
             feats.append(0.0)  # zero duration
     return np.asarray(feats, dtype=np.float32)
+
+
+# Fleet-aware observation: the per-device features above plus two fleet
+# signals read off the dispatch-time load trace (repro.fleet.FleetView) —
+# this device's share of the fleet backlog, and the normalized fleet-wide
+# backlog.  The 2+2m core layout is unchanged, so a single-GPU policy can be
+# warm-started by zero-padding and a fleet policy degrades gracefully when
+# the fleet context is absent (both extras read 0.0).
+FLEET_EXTRA_FEATURES = 2
+FLEET_FEATURE_DIM = FEATURE_DIM + FLEET_EXTRA_FEATURES
+
+
+def fleet_state_features(
+    t: float,
+    sim: "MIGSimulator",
+    device_index: int,
+    view: "FleetView | None",
+    m: int = M_JOBS,
+) -> np.ndarray:
+    """Per-device observation inside a fleet, in [0, 1]^FLEET_FEATURE_DIM."""
+    base = state_features(t, sim, m)
+    if view is None:
+        share, pressure = 0.0, 0.0
+    else:
+        share = view.load_share(device_index, t)
+        pressure = view.total_load_norm(t)
+    return np.concatenate(
+        [base, np.asarray([share, pressure], dtype=np.float32)]
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,11 +16,12 @@ from repro.core.metrics import SimResult
 from repro.core.rl.agent import DQNAgent, greedy_policy
 from repro.core.rl.dqn import DQNConfig, DQNLearner
 from repro.core.rl.env import FEATURE_DIM, RewardWeights
+from repro.core.scenarios import generate_scenario
 from repro.core.schedulers import Scheduler, make_scheduler
 from repro.core.simulator import MIGSimulator, RepartitionPolicy
 from repro.core.workload import WorkloadSpec, generate_jobs
 
-__all__ = ["TrainStats", "train_dqn", "evaluate_policy"]
+__all__ = ["TrainStats", "train_dqn", "evaluate_policy", "evaluate_policy_fleet"]
 
 
 @dataclasses.dataclass
@@ -42,12 +43,18 @@ def train_dqn(
     verbose: bool = False,
     guide=None,
     guide_episodes: int = 0,
+    scenario: Optional[str] = None,
+    scenario_kwargs: Optional[Dict] = None,
 ) -> tuple:
     """Train the repartitioning DQN; returns (learner, TrainStats).
 
     ``guide``/``guide_episodes``: optional demonstration warm-start — the
     first episodes act with the guide policy while the learner trains on the
     resulting transitions (beyond-paper; cuts random-exploration burn-in).
+
+    ``scenario`` draws episode workloads from the named registry entry
+    (:mod:`repro.core.scenarios`) instead of ``spec`` — training against
+    bursty or heavy-tailed days uses the same loop.
     """
     spec = spec or WorkloadSpec()
     cfg = dqn_config or DQNConfig(state_dim=FEATURE_DIM, seed=seed)
@@ -60,7 +67,11 @@ def train_dqn(
     ep_proxy: List[float] = []
     all_losses: List[float] = []
     for ep in range(num_episodes):
-        jobs = generate_jobs(spec, seed=seed * 100_003 + ep)
+        ep_seed = seed * 100_003 + ep
+        if scenario is not None:
+            jobs = generate_scenario(scenario, seed=ep_seed, **(scenario_kwargs or {}))
+        else:
+            jobs = generate_jobs(spec, seed=ep_seed)
         agent.begin_episode(learner.epsilon(ep))
         agent.use_guide = guide is not None and ep < guide_episodes
         result = sim.run(jobs, policy=agent)
@@ -93,6 +104,8 @@ def evaluate_policy(
     seed: int = 10_000,
     mig_enabled: bool = True,
     workers: int = 0,
+    scenario: Optional[str] = None,
+    scenario_kwargs: Optional[Dict] = None,
 ) -> List[SimResult]:
     """Run ``num_iterations`` independent day simulations under a policy.
 
@@ -104,26 +117,96 @@ def evaluate_policy(
     The runs go through the sweep engine (:mod:`repro.sweep`): registered
     policies are memoized on disk and fan out over ``workers`` processes;
     ad-hoc callables run inline and uncached (a closure over live learner
-    state is neither picklable nor content-addressable).
+    state is neither picklable nor content-addressable).  ``scenario``
+    swaps the workload for a registered scenario (bursty, heavy-tailed, ...).
     """
-    from repro.sweep import make_cell, result_to_sim_result, run_cells
+    from repro.sweep import make_cell, make_scenario_cell, result_to_sim_result, run_cells
 
     spec = spec or WorkloadSpec()
+    policy_name, policy_kwargs, factory = _resolve_policy(policy_factory)
+    cells = []
+    for it in range(num_iterations):
+        if scenario is not None:
+            cells.append(
+                make_scenario_cell(
+                    experiment="evaluate_policy",
+                    group=policy_name,
+                    scheduler=scheduler_name,
+                    scenario=scenario,
+                    scenario_kwargs=scenario_kwargs,
+                    seed=seed + it,
+                    policy=policy_name,
+                    policy_kwargs=policy_kwargs,
+                    mig_enabled=mig_enabled,
+                )
+            )
+        else:
+            cells.append(
+                make_cell(
+                    experiment="evaluate_policy",
+                    group=policy_name,
+                    scheduler=scheduler_name,
+                    workload=spec,
+                    seed=seed + it,
+                    policy=policy_name,
+                    policy_kwargs=policy_kwargs,
+                    mig_enabled=mig_enabled,
+                )
+            )
+    outcome = run_cells(
+        "evaluate_policy",
+        cells,
+        workers=workers,
+        cache=factory is None,
+        artifacts_dir=None,
+        policy_factory=factory,
+    )
+    return [result_to_sim_result(r) for r in outcome.results]
+
+
+def _resolve_policy(policy_factory):
+    """(name, kwargs, ad_hoc_factory) from the evaluate_policy spec forms."""
     if isinstance(policy_factory, str):
-        policy_name, policy_kwargs = policy_factory, {}
-        factory = None
-    elif isinstance(policy_factory, tuple):
-        policy_name, policy_kwargs = policy_factory
-        factory = None
-    else:
-        policy_name, policy_kwargs = "static", {}  # placeholder; factory wins
-        factory = policy_factory
+        return policy_factory, {}, None
+    if isinstance(policy_factory, tuple):
+        name, kwargs = policy_factory
+        return name, kwargs, None
+    return "static", {}, policy_factory  # placeholder name; factory wins
+
+
+def evaluate_policy_fleet(
+    policy_factory,
+    profiles: Sequence[str] = ("a100-250w",),
+    dispatcher: str = "round-robin",
+    num_iterations: int = 20,
+    scheduler_name: str = "EDF-SS",
+    scenario: str = "paper-diurnal",
+    scenario_kwargs: Optional[Dict] = None,
+    seed: int = 20_000,
+    mig_enabled: bool = True,
+    workers: int = 0,
+) -> List[SimResult]:
+    """Evaluate a repartitioning policy per-device inside a fleet.
+
+    Each iteration dispatches one scenario day across ``profiles`` and runs
+    an *independent instance* of the policy on every device (policies carry
+    run state); returns the fleet-aggregate :class:`SimResult` per
+    iteration.  Registered policies go through the sweep engine (cached,
+    parallel); ad-hoc factories run inline and uncached, exactly as in
+    :func:`evaluate_policy`.
+    """
+    from repro.sweep import make_fleet_cell, result_to_sim_result, run_cells
+
+    policy_name, policy_kwargs, factory = _resolve_policy(policy_factory)
     cells = [
-        make_cell(
-            experiment="evaluate_policy",
+        make_fleet_cell(
+            experiment="evaluate_policy_fleet",
             group=policy_name,
+            profiles=profiles,
+            dispatcher=dispatcher,
             scheduler=scheduler_name,
-            workload=spec,
+            scenario=scenario,
+            scenario_kwargs=scenario_kwargs,
             seed=seed + it,
             policy=policy_name,
             policy_kwargs=policy_kwargs,
@@ -132,7 +215,7 @@ def evaluate_policy(
         for it in range(num_iterations)
     ]
     outcome = run_cells(
-        "evaluate_policy",
+        "evaluate_policy_fleet",
         cells,
         workers=workers,
         cache=factory is None,

@@ -22,13 +22,13 @@ import enum
 import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
 from repro.core.jobs import Job
 from repro.core.metrics import SimResult
 from repro.core.power import A100_250W, PowerModel
 from repro.core.schedulers import Assignment, Scheduler
-from repro.core.slices import MIG_CONFIGS, Partition, config
+from repro.core.slices import MIG_CONFIGS, Partition
 
 __all__ = [
     "RepartitionPolicy",
@@ -162,16 +162,22 @@ class MIGSimulator:
         mig_enabled: bool = True,
         repartition_penalty_min: float = REPARTITION_PENALTY_MIN,
         max_events: int = 5_000_000,
+        config_table: Optional[Mapping[int, Partition]] = None,
     ) -> None:
         self.scheduler = scheduler
         self.power = power_model
         self.mig_enabled = mig_enabled
         self.penalty = repartition_penalty_min
         self.max_events = max_events
+        # per-device partition table (fleet heterogeneity): defaults to the
+        # paper's A100 Fig. 1 table, under which behavior is unchanged
+        self.configs: Mapping[int, Partition] = (
+            dict(config_table) if config_table is not None else MIG_CONFIGS
+        )
 
         # runtime state (reset per run)
         self.t = 0.0
-        self.partition: Partition = config(1)
+        self.partition: Partition = self._config(min(self.configs))
         self.active: Dict[int, Job] = {}
         self.assignment: Assignment = {}
         self.completed: List[Job] = []
@@ -186,6 +192,15 @@ class MIGSimulator:
         self._pending_config: Optional[int] = None
 
     # ------------------------------------------------------------------
+    def _config(self, config_id: int) -> Partition:
+        try:
+            return self.configs[config_id]
+        except KeyError as e:
+            raise KeyError(
+                f"config {config_id} not in this device's table "
+                f"(valid ids {sorted(self.configs)})"
+            ) from e
+
     @property
     def busy_slots(self) -> float:
         if self._repartitioning_until is not None:
@@ -273,7 +288,7 @@ class MIGSimulator:
 
     def _finish_repartition(self) -> None:
         assert self._pending_config is not None
-        self.partition = config(self._pending_config)
+        self.partition = self._config(self._pending_config)
         self.config_trace.append((self.t, self.partition.config_id))
         self._pending_config = None
         self._repartitioning_until = None
@@ -296,7 +311,7 @@ class MIGSimulator:
 
         # reset state
         self.t = 0.0
-        self.partition = config(cfg0)
+        self.partition = self._config(cfg0)
         self.active = {}
         self.assignment = {}
         self.completed = []
@@ -354,8 +369,11 @@ class MIGSimulator:
                 decision_hook(self.t, self)
             choice = policy.decide(self.t, self)
             if choice is not None and choice != self.partition.config_id:
-                if choice not in MIG_CONFIGS:
-                    raise KeyError(f"policy chose invalid config {choice}")
+                if choice not in self.configs:
+                    raise KeyError(
+                        f"policy chose config {choice}, not in this device's "
+                        f"table (valid ids {sorted(self.configs)})"
+                    )
                 self._start_repartition(choice)
                 push(self._repartitioning_until, _Ev.REPART_DONE)
 

@@ -19,11 +19,13 @@ __all__ = [
     "SliceType",
     "Partition",
     "MIG_CONFIGS",
+    "A30_CONFIGS",
     "NUM_CONFIGS",
     "TOTAL_SLOTS",
     "ALL_SLICE_SIZES",
     "config",
     "config_ids",
+    "validate_config_table",
 ]
 
 TOTAL_SLOTS = 7
@@ -137,19 +139,42 @@ def config_ids() -> Sequence[int]:
     return tuple(sorted(MIG_CONFIGS))
 
 
-def _validate_table() -> None:
-    """Sanity-check the Fig. 1 table (invoked at import, cheap)."""
-    for cid, part in MIG_CONFIGS.items():
+# ----------------------------------------------------------------------
+# A30-class device (24 GB, 4 compute slots): the second fleet profile.
+# NVIDIA's A30 MIG geometry: 1g.6gb, 2g.12gb, 4g.24gb; four valid layouts.
+
+A30_S1_6 = SliceType(1, 6)
+A30_S2_12 = SliceType(2, 12)
+A30_S4_24 = SliceType(4, 24)
+
+A30_CONFIGS: Dict[int, Partition] = {
+    1: _mk(1, A30_S4_24),
+    2: _mk(2, A30_S2_12, A30_S2_12),
+    3: _mk(3, A30_S2_12, A30_S1_6, A30_S1_6),
+    4: _mk(4, A30_S1_6, A30_S1_6, A30_S1_6, A30_S1_6),
+}
+
+
+def validate_config_table(
+    configs: Dict[int, Partition],
+    max_slots: int,
+    max_memory_gb: int,
+    max_1g10_slices: int | None = None,
+) -> None:
+    """Sanity-check a device's partition table (invoked at import, cheap)."""
+    for cid, part in configs.items():
         if part.config_id != cid:
             raise AssertionError(f"config id mismatch for {cid}")
-        if part.total_slots > TOTAL_SLOTS:
-            raise AssertionError(f"config {cid} exceeds {TOTAL_SLOTS} slots")
-        if part.total_memory_gb > 40:
-            raise AssertionError(f"config {cid} exceeds 40GB")
-        # at most one 1g.10gb slice per configuration (paper §III-A)
-        n_1g10 = sum(1 for s in part.slices if s == S1_10)
-        if n_1g10 > 1:
-            raise AssertionError(f"config {cid} has {n_1g10} 1g.10gb slices")
+        if part.total_slots > max_slots:
+            raise AssertionError(f"config {cid} exceeds {max_slots} slots")
+        if part.total_memory_gb > max_memory_gb:
+            raise AssertionError(f"config {cid} exceeds {max_memory_gb}GB")
+        if max_1g10_slices is not None:
+            n_1g10 = sum(1 for s in part.slices if s == S1_10)
+            if n_1g10 > max_1g10_slices:
+                raise AssertionError(f"config {cid} has {n_1g10} 1g.10gb slices")
 
 
-_validate_table()
+# A100 Fig. 1 table: at most one 1g.10gb slice per configuration (paper §III-A)
+validate_config_table(MIG_CONFIGS, TOTAL_SLOTS, 40, max_1g10_slices=1)
+validate_config_table(A30_CONFIGS, 4, 24)

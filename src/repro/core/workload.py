@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Optional, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,7 +33,15 @@ from repro.core.jobs import (
     capped,
 )
 
-__all__ = ["WorkloadSpec", "DIURNAL_RATE_PER_MIN", "arrival_rate", "generate_jobs"]
+__all__ = [
+    "WorkloadSpec",
+    "DIURNAL_RATE_PER_MIN",
+    "arrival_rate",
+    "generate_jobs",
+    "sample_poisson_arrivals",
+    "jobs_from_arrivals",
+    "DurationSampler",
+]
 
 MINUTES_PER_DAY = 24 * 60
 
@@ -87,18 +95,34 @@ class WorkloadSpec:
         return max(DIURNAL_RATE_PER_MIN)
 
 
-def _sample_arrivals(spec: WorkloadSpec, rng: np.random.Generator) -> List[float]:
-    """Thinning sampler for the (non-)homogeneous Poisson process."""
-    lam_max = spec.peak_rate
+def sample_poisson_arrivals(
+    horizon_min: float,
+    rate_fn: Callable[[float], float],
+    lam_max: float,
+    rng: np.random.Generator,
+) -> List[float]:
+    """Thinning sampler for a (non-)homogeneous Poisson process.
+
+    ``rate_fn(t)`` must never exceed ``lam_max`` on [0, horizon_min); the
+    returned arrival times are strictly increasing by construction.  The
+    scenario library (:mod:`repro.core.scenarios`) reuses this for rate
+    patterns the :class:`WorkloadSpec` cannot express (MMPP bursts, scaled
+    traces); the RNG draw sequence is identical to the original in-spec
+    sampler, so the default diurnal path is bit-stable across the refactor.
+    """
     t = 0.0
     out: List[float] = []
     while True:
         t += rng.exponential(1.0 / lam_max)
-        if t >= spec.horizon_min:
+        if t >= horizon_min:
             break
-        if rng.uniform() * lam_max <= spec.rate(t):
+        if rng.uniform() * lam_max <= rate_fn(t):
             out.append(t)
     return out
+
+
+def _sample_arrivals(spec: WorkloadSpec, rng: np.random.Generator) -> List[float]:
+    return sample_poisson_arrivals(spec.horizon_min, spec.rate, spec.peak_rate, rng)
 
 
 def _sample_elasticity(rng: np.random.Generator) -> Elasticity:
@@ -111,26 +135,45 @@ def _sample_elasticity(rng: np.random.Generator) -> Elasticity:
     return SUBLINEAR_CURVES[label]
 
 
-def generate_jobs(
+#: Optional per-job duration override: ``(kind, rng) -> work`` in 1g-minutes.
+#: Used by heavy-tailed scenarios; must perform exactly one bounded draw so
+#: job attributes stay deterministic per seed.
+DurationSampler = Callable[[JobKind, np.random.Generator], float]
+
+
+def _sample_work(
     spec: WorkloadSpec,
-    seed: int,
-    max_jobs: Optional[int] = None,
+    kind: JobKind,
+    rng: np.random.Generator,
+    duration_sampler: Optional[DurationSampler] = None,
+) -> float:
+    if duration_sampler is not None:
+        return duration_sampler(kind, rng)
+    if kind is JobKind.INFERENCE:
+        # Exp(lambda=3): duration on a 1g slice, minutes.
+        work = rng.exponential(spec.inference_mean_min)
+        return max(work, 1.0 / 60.0)  # floor at one second
+    return rng.uniform(spec.training_lo_min, spec.training_hi_min)
+
+
+def jobs_from_arrivals(
+    spec: WorkloadSpec,
+    arrivals: Sequence[float],
+    rng: np.random.Generator,
+    duration_sampler: Optional[DurationSampler] = None,
 ) -> List[Job]:
-    """Generate one simulation's job queue (sorted by arrival)."""
-    rng = np.random.default_rng(seed)
-    arrivals = _sample_arrivals(spec, rng)
-    if max_jobs is not None:
-        arrivals = arrivals[:max_jobs]
+    """Draw per-job attributes (§V-A) for pre-sampled arrival times.
+
+    The RNG call sequence per job — split, duration, elasticity, slack — is
+    exactly the legacy ``generate_jobs`` order, so the default path is
+    bit-identical across the refactor.  ``duration_sampler`` swaps only the
+    duration draw (heavy-tailed scenarios).
+    """
     jobs: List[Job] = []
     for i, t in enumerate(arrivals):
         is_inf = rng.uniform() < spec.inference_split
         kind = JobKind.INFERENCE if is_inf else JobKind.TRAINING
-        if is_inf:
-            # Exp(lambda=3): duration on a 1g slice, minutes.
-            work = rng.exponential(spec.inference_mean_min)
-            work = max(work, 1.0 / 60.0)  # floor at one second
-        else:
-            work = rng.uniform(spec.training_lo_min, spec.training_hi_min)
+        work = _sample_work(spec, kind, rng, duration_sampler)
         elast = _sample_elasticity(rng)
         slack = rng.uniform(spec.slack_lo, spec.slack_hi)
         dur_fastest = elast.duration(work, 7)
@@ -149,3 +192,16 @@ def generate_jobs(
             )
         )
     return jobs
+
+
+def generate_jobs(
+    spec: WorkloadSpec,
+    seed: int,
+    max_jobs: Optional[int] = None,
+) -> List[Job]:
+    """Generate one simulation's job queue (sorted by arrival)."""
+    rng = np.random.default_rng(seed)
+    arrivals = _sample_arrivals(spec, rng)
+    if max_jobs is not None:
+        arrivals = arrivals[:max_jobs]
+    return jobs_from_arrivals(spec, arrivals, rng)

@@ -1,0 +1,50 @@
+"""Fleet-scale MIG simulation: N heterogeneous GPUs behind one dispatcher.
+
+The paper (§IV-§V) schedules a single MIG-capable GPU; a production fleet
+routes traffic across many of them.  This package adds that layer without
+touching the per-GPU physics: a pluggable dispatcher splits the arrival
+stream (:mod:`repro.fleet.dispatch`), each device runs the unchanged
+event-driven :class:`~repro.core.simulator.MIGSimulator` with its own power
+curve and partition table (:mod:`repro.fleet.devices`), and the per-device
+results are aggregated into fleet-level ET/energy/tardiness metrics
+(:mod:`repro.fleet.simulator`).
+
+A 1-device fleet is bit-identical to the single-MIG paper path — pinned by
+``tests/test_fleet.py`` and the ``fleet_scaling`` sweep baseline.
+"""
+
+from repro.fleet.devices import DEVICE_PROFILES, DeviceProfile, device_profile
+from repro.fleet.dispatch import (
+    DISPATCHERS,
+    DeviceLoadState,
+    Dispatcher,
+    dispatch_jobs,
+    make_dispatcher,
+)
+from repro.fleet.simulator import (
+    DeviceAdaptedPolicy,
+    FleetDeviceSpec,
+    FleetResult,
+    FleetSimulator,
+    FleetSpec,
+    FleetView,
+    aggregate_sim_results,
+)
+
+__all__ = [
+    "DEVICE_PROFILES",
+    "DeviceAdaptedPolicy",
+    "DeviceProfile",
+    "device_profile",
+    "DISPATCHERS",
+    "DeviceLoadState",
+    "Dispatcher",
+    "dispatch_jobs",
+    "make_dispatcher",
+    "FleetDeviceSpec",
+    "FleetResult",
+    "FleetSimulator",
+    "FleetSpec",
+    "FleetView",
+    "aggregate_sim_results",
+]

@@ -1,0 +1,57 @@
+"""Device profiles: the per-GPU hardware identity of a fleet member.
+
+A :class:`DeviceProfile` bundles what the single-GPU layers keep implicit —
+the Fig. 3 power curve and the Fig. 1 partition table — so a fleet can mix
+A100-class and A30-class devices (or the TPU-pod analogue) while each
+per-device :class:`~repro.core.simulator.MIGSimulator` stays unchanged.
+
+Profiles are referenced by name in sweep cells (a profile object is not
+JSON); the registry is the single source of truth for that mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Tuple
+
+from repro.core.power import A100_250W, A30_165W, TPU_V5E_POD, PowerModel
+from repro.core.slices import A30_CONFIGS, MIG_CONFIGS, Partition
+
+__all__ = ["DeviceProfile", "DEVICE_PROFILES", "device_profile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """A MIG-capable device type: power curve + partition table."""
+
+    name: str
+    power: PowerModel
+    configs: Mapping[int, Partition]
+    default_config: int  # a sensible mixed layout valid for this table
+
+    @property
+    def total_slots(self) -> int:
+        """Peak parallel compute slots (the full-GPU partition size)."""
+        return max(p.total_slots for p in self.configs.values())
+
+    def config_ids(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.configs))
+
+
+DEVICE_PROFILES: Dict[str, DeviceProfile] = {
+    p.name: p
+    for p in [
+        DeviceProfile("a100-250w", A100_250W, MIG_CONFIGS, default_config=3),
+        DeviceProfile("a30-165w", A30_165W, A30_CONFIGS, default_config=2),
+        DeviceProfile("tpu-v5e-pod", TPU_V5E_POD, MIG_CONFIGS, default_config=3),
+    ]
+}
+
+
+def device_profile(name: str) -> DeviceProfile:
+    try:
+        return DEVICE_PROFILES[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown device profile {name!r}; registered: {sorted(DEVICE_PROFILES)}"
+        ) from e

@@ -1,0 +1,276 @@
+"""Fleet-level MIG simulation: N heterogeneous GPUs behind one dispatcher.
+
+Execution model (two phases, both deterministic):
+
+1. *Dispatch* — the merged arrival stream is walked once; the pluggable
+   dispatcher (:mod:`repro.fleet.dispatch`) routes each job to a device from
+   a fluid per-device backlog estimate.
+2. *Simulate* — each device runs its job subset through its own
+   :class:`~repro.core.simulator.MIGSimulator` (own scheduler, repartition
+   policy, power model, and partition table), exactly as the single-GPU
+   paper path does.
+
+Per-device :class:`~repro.core.metrics.SimResult`\\ s are then aggregated
+into fleet totals.  The load-bearing invariant — pinned by tests and the
+``fleet_scaling`` CI baseline — is that a **1-device fleet is bit-identical
+to the single-MIG path**: one device receives the job list unchanged, runs
+the identical simulator, and ``aggregate_sim_results`` of one result *is*
+that result.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.jobs import Job
+from repro.core.metrics import SimResult
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import MIGSimulator, RepartitionPolicy
+from repro.core.slices import MIG_CONFIGS, Partition
+from repro.fleet.devices import DeviceProfile, device_profile
+from repro.fleet.dispatch import DispatchTrace, dispatch_jobs, make_dispatcher
+
+__all__ = [
+    "DeviceAdaptedPolicy",
+    "FleetDeviceSpec",
+    "FleetSpec",
+    "FleetResult",
+    "FleetView",
+    "FleetSimulator",
+    "aggregate_sim_results",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDeviceSpec:
+    """One fleet member: a profile name plus optional per-device overrides."""
+
+    profile: str
+    scheduler: Optional[str] = None  # None -> the fleet default
+    initial_config: Optional[int] = None  # None -> the policy's choice
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A fleet: device list, dispatcher, and default in-device scheduler."""
+
+    devices: Tuple[FleetDeviceSpec, ...]
+    dispatcher: str = "round-robin"
+    scheduler: str = "EDF-SS"
+
+    @staticmethod
+    def of(profiles: Sequence[str], dispatcher: str = "round-robin",
+           scheduler: str = "EDF-SS") -> "FleetSpec":
+        """Shorthand: a fleet from profile names with no per-device overrides."""
+        return FleetSpec(
+            devices=tuple(FleetDeviceSpec(profile=p) for p in profiles),
+            dispatcher=dispatcher,
+            scheduler=scheduler,
+        )
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Aggregate + per-device outcome of one fleet run."""
+
+    aggregate: SimResult
+    per_device: List[SimResult]
+    dispatch_counts: List[int]
+    trace: DispatchTrace
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.per_device)
+
+
+class FleetView:
+    """Read-only dispatch-time load lookup for fleet-aware observations.
+
+    Wraps the dispatch trace: ``load_share(i, t)`` is device ``i``'s share of
+    the fleet's estimated backlog at the last routing decision before ``t``,
+    ``total_load_norm(t)`` the fleet backlog normalized to ``norm_min``
+    device-minutes and clipped to [0, 1].
+    """
+
+    def __init__(self, trace: DispatchTrace, profiles: Sequence[DeviceProfile],
+                 norm_min: float = 120.0) -> None:
+        self._times = [t for t, _ in trace]
+        self._backlogs = [b for _, b in trace]
+        self._profiles = list(profiles)
+        self._norm_min = norm_min
+
+    def _at(self, t: float) -> Optional[Tuple[float, ...]]:
+        i = bisect.bisect_right(self._times, t) - 1
+        return self._backlogs[i] if i >= 0 else None
+
+    def load_share(self, device_index: int, t: float) -> float:
+        rec = self._at(t)
+        if rec is None:
+            return 0.0
+        total = sum(rec)
+        return rec[device_index] / total if total > 0.0 else 0.0
+
+    def total_load_norm(self, t: float) -> float:
+        rec = self._at(t)
+        if rec is None:
+            return 0.0
+        device_minutes = sum(
+            b / p.total_slots for b, p in zip(rec, self._profiles)
+        )
+        return min(device_minutes / self._norm_min, 1.0)
+
+
+def aggregate_sim_results(per_device: Sequence[SimResult]) -> SimResult:
+    """Fleet totals from per-device results.
+
+    For one device the input is returned unchanged — this is what makes the
+    1-GPU fleet bit-identical to the single-MIG path by construction rather
+    than by floating-point luck.
+    """
+    if not per_device:
+        raise ValueError("no device results")
+    if len(per_device) == 1:
+        return per_device[0]
+    num_jobs = sum(r.num_jobs for r in per_device)
+    total_tard = sum(r.total_tardiness for r in per_device)
+    return SimResult(
+        energy_wh=sum(r.energy_wh for r in per_device),
+        avg_tardiness=total_tard / max(num_jobs, 1),
+        num_jobs=num_jobs,
+        total_tardiness=total_tard,
+        preemptions=sum(r.preemptions for r in per_device),
+        repartitions=sum(r.repartitions for r in per_device),
+        max_tardiness=max(r.max_tardiness for r in per_device),
+        deadline_misses=sum(r.deadline_misses for r in per_device),
+        busy_slot_minutes=sum(r.busy_slot_minutes for r in per_device),
+        extra={
+            "makespan_min": max(r.extra.get("makespan_min", 0.0) for r in per_device),
+            "tardiness_integral": sum(
+                r.extra.get("tardiness_integral", 0.0) for r in per_device
+            ),
+        },
+    )
+
+
+class DeviceAdaptedPolicy:
+    """Maps a policy's config choices onto a non-A100 device's table.
+
+    Every registered dynamic policy (daynight, heuristic, DQN) emits ids in
+    the paper's A100 Fig. 1 space; on a device with a different table those
+    ids would KeyError mid-run.  An out-of-table choice is mapped to the
+    device config whose *slice count* is closest to the requested A100
+    layout's — the policy decides how finely partitioned the GPU should be,
+    and that intent survives the translation.  In-table choices pass through
+    untouched, so the wrapper is the identity on A100 devices.
+    """
+
+    def __init__(self, inner: RepartitionPolicy, configs: "dict[int, Partition]") -> None:
+        self.inner = inner
+        self.configs = dict(configs)
+        self.initial_config = self._map(inner.initial_config)
+
+    def _map(self, choice: Optional[int]) -> Optional[int]:
+        if choice is None or choice in self.configs:
+            return choice
+        ref = MIG_CONFIGS.get(choice)
+        if ref is None:
+            return choice  # unknown everywhere: let the simulator raise
+        want = ref.num_slices
+        return min(
+            self.configs,
+            key=lambda cid: (abs(self.configs[cid].num_slices - want), cid),
+        )
+
+    def decide(self, t: float, sim: MIGSimulator) -> Optional[int]:
+        return self._map(self.inner.decide(t, sim))
+
+    def next_timer(self, t: float) -> Optional[float]:
+        return self.inner.next_timer(t)
+
+
+#: per-device policy source: ``factory(device_index, profile) -> policy``
+PolicyFactory = Callable[[int, DeviceProfile], RepartitionPolicy]
+
+
+class FleetSimulator:
+    """Run a :class:`FleetSpec` over a job stream.
+
+    Policies are built per device via ``policy_factory`` (policy instances
+    carry per-run state and must never be shared across devices).  The last
+    run's per-device simulators stay on ``self.sims`` for inspection — the
+    RL layer reads their queue state through
+    :func:`repro.core.rl.env.fleet_state_features`.
+    """
+
+    def __init__(self, spec: FleetSpec, mig_enabled: bool = True) -> None:
+        if not spec.devices:
+            raise ValueError("fleet needs at least one device")
+        self.spec = spec
+        self.mig_enabled = mig_enabled
+        self.profiles = [device_profile(d.profile) for d in spec.devices]
+        self.sims: List[MIGSimulator] = []
+        self.view: Optional[FleetView] = None
+
+    def run(
+        self,
+        jobs: Sequence[Job],
+        policy_factory: PolicyFactory,
+        decision_hook: Optional[Callable[[int, float, MIGSimulator], None]] = None,
+    ) -> FleetResult:
+        dispatcher = make_dispatcher(self.spec.dispatcher)
+        assignments, trace = dispatch_jobs(jobs, self.profiles, dispatcher)
+        self.view = FleetView(trace, self.profiles)
+
+        self.sims = []
+        per_device: List[SimResult] = []
+        counts = [0] * len(self.profiles)
+        for a in assignments:
+            counts[a] += 1
+        for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles)):
+            subset = [job for job, a in zip(jobs, assignments) if a == i]
+            sim = MIGSimulator(
+                make_scheduler(dev.scheduler or self.spec.scheduler),
+                power_model=prof.power,
+                mig_enabled=self.mig_enabled,
+                config_table=prof.configs,
+            )
+            hook = None
+            if decision_hook is not None:
+                hook = (lambda idx: lambda t, s: decision_hook(idx, t, s))(i)
+            policy = policy_factory(i, prof)
+            if set(prof.configs) != set(MIG_CONFIGS):
+                # non-A100 table: translate the policy's A100-space choices
+                policy = DeviceAdaptedPolicy(policy, prof.configs)
+            res = sim.run(
+                subset,
+                policy=policy,
+                initial_config=dev.initial_config,
+                decision_hook=hook,
+            )
+            self.sims.append(sim)
+            per_device.append(res)
+        aggregate = aggregate_sim_results(per_device)
+        if len(per_device) > 1:
+            # Per-device energy only covers [0, device makespan] (the single-GPU
+            # convention).  Devices the dispatcher starved still draw idle power
+            # until the fleet drains; report that separately so packing
+            # dispatchers aren't credited with turning idle silicon off.
+            fleet_makespan = aggregate.extra["makespan_min"]
+            idle_gap_wh = sum(
+                prof.power.idle_watts
+                * max(fleet_makespan - res.extra.get("makespan_min", 0.0), 0.0)
+                / 60.0
+                for prof, res in zip(self.profiles, per_device)
+            )
+            aggregate = dataclasses.replace(
+                aggregate,
+                extra={**aggregate.extra, "fleet_idle_gap_wh": idle_gap_wh},
+            )
+        return FleetResult(
+            aggregate=aggregate,
+            per_device=per_device,
+            dispatch_counts=counts,
+            trace=trace,
+        )

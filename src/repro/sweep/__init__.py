@@ -15,12 +15,15 @@ See :mod:`repro.sweep.grids` for the registry and :mod:`repro.sweep.runner`
 for execution semantics.
 """
 
-from repro.sweep.cache import SweepCache
+from repro.sweep.cache import StaleCacheError, SweepCache
 from repro.sweep.cells import (
     cell_hash,
+    cell_jobs,
     group_results,
     make_cell,
+    make_fleet_cell,
     make_policy,
+    make_scenario_cell,
     result_to_sim_result,
     run_cell,
 )
@@ -30,12 +33,16 @@ from repro.sweep.runner import SweepOutcome, run_cells
 __all__ = [
     "GRIDS",
     "GridDef",
+    "StaleCacheError",
     "SweepCache",
     "SweepOutcome",
     "cell_hash",
+    "cell_jobs",
     "group_results",
     "make_cell",
+    "make_fleet_cell",
     "make_policy",
+    "make_scenario_cell",
     "result_to_sim_result",
     "run_cell",
     "run_cells",

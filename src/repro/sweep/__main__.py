@@ -3,12 +3,16 @@
 ::
 
     python -m repro.sweep --list
+    python -m repro.sweep fleet_scaling --workers 4
     python -m repro.sweep --grid table2_schedulers --workers 4
-    python -m repro.sweep --grid smoke --scale 0.1 --workers 2 \\
+    python -m repro.sweep smoke --scale 0.1 --workers 2 \\
         --check-baseline benchmarks/baselines/smoke_sweep.jsonl
 
+Grids are named positionally or via the repeatable ``--grid`` flag.
 ``--resume`` (default) serves previously computed cells from the on-disk
 cache; ``--no-resume`` recomputes everything (results are still persisted).
+Resuming refuses (exit 2) when the cache holds cells from a different
+``SIM_VERSION`` — ``--purge-stale-cache`` drops them first.
 ``--check-baseline`` re-reads the freshly written JSONL artifact and compares
 it cell-by-cell against a checked-in baseline with a float tolerance; a
 mismatch exits non-zero (the CI regression gate).
@@ -23,6 +27,7 @@ import sys
 import time
 from typing import Any, Dict, List
 
+from repro.sweep.cache import DEFAULT_CACHE_DIR, StaleCacheError, SweepCache
 from repro.sweep.grids import GRIDS, run_grid
 
 
@@ -90,6 +95,8 @@ def check_baseline(jsonl_path: str, baseline_path: str, rtol: float) -> int:
 
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep")
+    ap.add_argument("grids", nargs="*", metavar="GRID",
+                    help="grid name(s) to run (same namespace as --grid)")
     ap.add_argument("--grid", action="append", default=None,
                     help="grid name (repeatable), or 'all'; default table2_schedulers")
     ap.add_argument("--list", action="store_true", help="list available grids")
@@ -104,6 +111,8 @@ def main(argv: List[str] | None = None) -> int:
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the on-disk cache entirely")
     ap.add_argument("--cache-dir", default=None, help="cache directory override")
+    ap.add_argument("--purge-stale-cache", action="store_true",
+                    help="delete cached cells from other SIM_VERSIONs, then run")
     ap.add_argument("--artifacts-dir", default=None,
                     help="JSONL artifact directory (default artifacts/sweeps)")
     ap.add_argument("--check-baseline", default=None, metavar="JSONL",
@@ -117,7 +126,10 @@ def main(argv: List[str] | None = None) -> int:
             print(f"{name:24s} {grid.doc}")
         return 0
 
-    names = args.grid or ["table2_schedulers"]
+    names = list(args.grids) + list(args.grid or [])
+    explicit_grids = bool(names)
+    if not names:
+        names = ["table2_schedulers"]
     if "all" in names:
         names = [n for n in GRIDS if n != "smoke"]
     unknown = [n for n in names if n not in GRIDS]
@@ -125,12 +137,29 @@ def main(argv: List[str] | None = None) -> int:
         ap.error(f"unknown grid(s) {unknown}; available: {', '.join(sorted(GRIDS))}")
     if args.check_baseline and not os.path.exists(args.check_baseline):
         ap.error(f"baseline file not found: {args.check_baseline}")
+    if args.check_baseline and len(names) > 1:
+        # one baseline file cannot describe several grids; diffing each grid
+        # against it would guarantee spurious mismatches for all but one
+        ap.error(
+            "--check-baseline takes exactly one grid per invocation "
+            f"(got {len(names)}: {', '.join(names)})"
+        )
 
     cache: Any = True
     if args.no_cache:
         cache = False
     elif args.cache_dir:
         cache = args.cache_dir
+
+    if args.purge_stale_cache and not args.no_cache:
+        purge_dir = args.cache_dir or DEFAULT_CACHE_DIR
+        removed = SweepCache(purge_dir).purge_stale()
+        print(f"# purged {removed} stale cache entries from {purge_dir}",
+              file=sys.stderr)
+        if not explicit_grids:
+            # bare `--purge-stale-cache` (the StaleCacheError remediation)
+            # is purge-only — don't surprise the user with a default sweep
+            return 0
 
     kwargs: Dict[str, Any] = {}
     if args.artifacts_dir is not None:
@@ -139,15 +168,19 @@ def main(argv: List[str] | None = None) -> int:
     failed = 0
     for name in names:
         t0 = time.time()
-        rows, outcome = run_grid(
-            name,
-            scale=args.scale,
-            workers=args.workers,
-            cache=cache,
-            resume=args.resume,
-            progress=lambda m: print(m, file=sys.stderr),
-            **kwargs,
-        )
+        try:
+            rows, outcome = run_grid(
+                name,
+                scale=args.scale,
+                workers=args.workers,
+                cache=cache,
+                resume=args.resume,
+                progress=lambda m: print(m, file=sys.stderr),
+                **kwargs,
+            )
+        except StaleCacheError as e:
+            print(f"ERROR: {e}", file=sys.stderr)
+            return 2
         print_rows(name, rows)
         print(
             f"# {name}: {outcome.total} cells "

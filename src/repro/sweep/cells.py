@@ -31,6 +31,7 @@ import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.metrics import SimResult
+from repro.core.scenarios import generate_scenario, resolve_scenario_kwargs
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import (
     SIM_VERSION,
@@ -46,8 +47,11 @@ __all__ = [
     "POLICIES",
     "canonical_json",
     "cell_hash",
+    "cell_jobs",
     "make_cell",
+    "make_fleet_cell",
     "make_policy",
+    "make_scenario_cell",
     "result_to_sim_result",
     "run_cell",
     "workload_to_dict",
@@ -115,17 +119,17 @@ def workload_to_dict(spec: WorkloadSpec) -> Dict[str, Any]:
     return dataclasses.asdict(spec)
 
 
-def make_cell(
+def _base_cell(
     *,
     experiment: str,
     group: str,
     scheduler: str,
-    workload: WorkloadSpec,
     seed: int,
-    policy: str = "static",
-    policy_kwargs: Optional[Mapping[str, Any]] = None,
-    mig_enabled: bool = True,
+    policy: str,
+    policy_kwargs: Optional[Mapping[str, Any]],
+    mig_enabled: bool,
 ) -> Cell:
+    """The fields every cell shares; workload/scenario keys are added on top."""
     policy_kwargs = dict(policy_kwargs or {})
     # Policies that load weights from disk are only content-addressable if the
     # weights themselves enter the hash: a retrained checkpoint at the same
@@ -138,10 +142,106 @@ def make_cell(
         "scheduler": scheduler,
         "policy": policy,
         "policy_kwargs": policy_kwargs,
-        "workload": workload_to_dict(workload),
         "seed": int(seed),
         "mig_enabled": bool(mig_enabled),
     }
+
+
+def make_cell(
+    *,
+    experiment: str,
+    group: str,
+    scheduler: str,
+    workload: WorkloadSpec,
+    seed: int,
+    policy: str = "static",
+    policy_kwargs: Optional[Mapping[str, Any]] = None,
+    mig_enabled: bool = True,
+) -> Cell:
+    cell = _base_cell(
+        experiment=experiment,
+        group=group,
+        scheduler=scheduler,
+        seed=seed,
+        policy=policy,
+        policy_kwargs=policy_kwargs,
+        mig_enabled=mig_enabled,
+    )
+    cell["workload"] = workload_to_dict(workload)
+    return cell
+
+
+def make_scenario_cell(
+    *,
+    experiment: str,
+    group: str,
+    scheduler: str,
+    scenario: str,
+    seed: int,
+    scenario_kwargs: Optional[Mapping[str, Any]] = None,
+    policy: str = "static",
+    policy_kwargs: Optional[Mapping[str, Any]] = None,
+    mig_enabled: bool = True,
+) -> Cell:
+    """A cell whose jobs come from a registered scenario, not a raw spec.
+
+    The scenario's knobs are resolved against its defaults into the cell —
+    the content hash must capture the values the generator saw, exactly as
+    ``workload_to_dict`` resolves :class:`WorkloadSpec` defaults.
+    """
+    cell = _base_cell(
+        experiment=experiment,
+        group=group,
+        scheduler=scheduler,
+        seed=seed,
+        policy=policy,
+        policy_kwargs=policy_kwargs,
+        mig_enabled=mig_enabled,
+    )
+    cell["scenario"] = {
+        "name": scenario,
+        "kwargs": resolve_scenario_kwargs(scenario, scenario_kwargs),
+    }
+    return cell
+
+
+def make_fleet_cell(
+    *,
+    experiment: str,
+    group: str,
+    profiles: Sequence[str],
+    dispatcher: str,
+    scheduler: str,
+    scenario: str,
+    seed: int,
+    scenario_kwargs: Optional[Mapping[str, Any]] = None,
+    policy: str = "static",
+    policy_kwargs: Optional[Mapping[str, Any]] = None,
+    mig_enabled: bool = True,
+) -> Cell:
+    """A fleet cell: N devices (by profile name) behind a dispatcher.
+
+    Builds on :func:`make_scenario_cell`; the extra ``fleet`` key routes
+    :func:`run_cell` through :class:`repro.fleet.FleetSimulator`.  Every
+    device runs ``scheduler`` and an independent instance of the cell's
+    repartitioning policy.
+    """
+    cell = make_scenario_cell(
+        experiment=experiment,
+        group=group,
+        scheduler=scheduler,
+        scenario=scenario,
+        seed=seed,
+        scenario_kwargs=scenario_kwargs,
+        policy=policy,
+        policy_kwargs=policy_kwargs,
+        mig_enabled=mig_enabled,
+    )
+    cell["fleet"] = {
+        "devices": [{"profile": p} for p in profiles],
+        "dispatcher": dispatcher,
+    }
+    return cell
 
 
 def canonical_json(obj: Any) -> str:
@@ -163,28 +263,22 @@ def cell_hash(cell: Cell, sim_version: str = SIM_VERSION) -> str:
 # ----------------------------------------------------------------------
 # execution
 
-def run_cell(
-    cell: Cell,
-    policy_factory: Optional[Callable[[], RepartitionPolicy]] = None,
-) -> Dict[str, Any]:
-    """Execute one cell; returns a JSON-serializable result dict.
-
-    ``policy_factory`` overrides the registry lookup for in-process runs with
-    unpicklable ad-hoc policies (e.g. a live DQN agent mid-training); such
-    cells bypass the cache at the runner layer.
-    """
+def cell_jobs(cell: Cell) -> List[Any]:
+    """Materialize the cell's job stream (scenario cells or raw-spec cells)."""
+    if "scenario" in cell:
+        sc = cell["scenario"]
+        return generate_scenario(sc["name"], seed=cell["seed"], **sc.get("kwargs", {}))
     spec = WorkloadSpec(**cell["workload"])
-    jobs = generate_jobs(spec, seed=cell["seed"])
-    if policy_factory is not None:
-        policy = policy_factory()
-    else:
-        policy = make_policy(cell["policy"], cell.get("policy_kwargs"))
-    sim = MIGSimulator(
-        make_scheduler(cell["scheduler"]), mig_enabled=cell["mig_enabled"]
-    )
-    t0 = time.perf_counter()
-    res = sim.run(jobs, policy=policy)
-    out = {
+    return generate_jobs(spec, seed=cell["seed"])
+
+
+def _result_dict(
+    res: SimResult,
+    util_histogram: Mapping[int, float],
+    config_trace: Sequence[Any],
+    t0: float,
+) -> Dict[str, Any]:
+    return {
         "energy_wh": res.energy_wh,
         "avg_tardiness": res.avg_tardiness,
         "num_jobs": res.num_jobs,
@@ -196,11 +290,89 @@ def run_cell(
         "busy_slot_minutes": res.busy_slot_minutes,
         "extra": dict(res.extra),
         # side-channel state some figures aggregate over:
-        "util_histogram": {str(k): v for k, v in sim.util_histogram.items()},
-        "config_trace": [[t, c] for t, c in sim.config_trace],
+        "util_histogram": {str(k): v for k, v in util_histogram.items()},
+        "config_trace": [[t, c] for t, c in config_trace],
         "elapsed_s": time.perf_counter() - t0,
     }
+
+
+def _run_fleet_cell(
+    cell: Cell,
+    policy_factory: Optional[Callable[[], RepartitionPolicy]] = None,
+) -> Dict[str, Any]:
+    # lazy import: plain single-GPU sweeps never pay for the fleet layer
+    from repro.fleet import FleetDeviceSpec, FleetSimulator, FleetSpec
+
+    f = cell["fleet"]
+    spec = FleetSpec(
+        devices=tuple(
+            FleetDeviceSpec(
+                profile=d["profile"],
+                scheduler=d.get("scheduler"),
+                initial_config=d.get("initial_config"),
+            )
+            for d in f["devices"]
+        ),
+        dispatcher=f["dispatcher"],
+        scheduler=cell["scheduler"],
+    )
+    if policy_factory is not None:
+        def per_device_policy(i, prof):
+            return policy_factory()
+    else:
+        def per_device_policy(i, prof):
+            # independent instance per device: policies carry run state
+            return make_policy(cell["policy"], cell.get("policy_kwargs"))
+
+    t0 = time.perf_counter()
+    jobs = cell_jobs(cell)
+    fsim = FleetSimulator(spec, mig_enabled=cell["mig_enabled"])
+    fres = fsim.run(jobs, policy_factory=per_device_policy)
+
+    util: Dict[int, float] = {}
+    for sim in fsim.sims:
+        for k, v in sim.util_histogram.items():
+            util[k] = util.get(k, 0.0) + v
+    out = _result_dict(fres.aggregate, util, [], t0)
+    out["dispatch_counts"] = list(fres.dispatch_counts)
+    out["devices"] = [
+        {
+            "profile": d["profile"],
+            "num_jobs": r.num_jobs,
+            "energy_wh": r.energy_wh,
+            "avg_tardiness": r.avg_tardiness,
+            "repartitions": r.repartitions,
+        }
+        for d, r in zip(f["devices"], fres.per_device)
+    ]
     return out
+
+
+def run_cell(
+    cell: Cell,
+    policy_factory: Optional[Callable[[], RepartitionPolicy]] = None,
+) -> Dict[str, Any]:
+    """Execute one cell; returns a JSON-serializable result dict.
+
+    ``policy_factory`` overrides the registry lookup for in-process runs with
+    unpicklable ad-hoc policies (e.g. a live DQN agent mid-training); such
+    cells bypass the cache at the runner layer.  Cells with a ``fleet`` key
+    run through :class:`repro.fleet.FleetSimulator` and report the fleet
+    aggregate in the standard result fields.
+    """
+    if "fleet" in cell:
+        return _run_fleet_cell(cell, policy_factory)
+    jobs = cell_jobs(cell)
+    if policy_factory is not None:
+        policy = policy_factory()
+    else:
+        policy = make_policy(cell["policy"], cell.get("policy_kwargs"))
+    sim = MIGSimulator(
+        make_scheduler(cell["scheduler"]), mig_enabled=cell["mig_enabled"]
+    )
+    t0 = time.perf_counter()
+    res = sim.run(jobs, policy=policy)
+    return _result_dict(res, sim.util_histogram, sim.config_trace, t0)
 
 
 _RESULT_FIELDS = (

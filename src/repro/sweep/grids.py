@@ -20,13 +20,31 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.metrics import SimResult, et_table
 from repro.core.workload import WorkloadSpec
-from repro.sweep.cells import Cell, group_results, make_cell, result_to_sim_result
+from repro.sweep.cells import (
+    Cell,
+    group_results,
+    make_cell,
+    make_fleet_cell,
+    make_scenario_cell,
+    result_to_sim_result,
+)
 from repro.sweep.runner import DEFAULT_ARTIFACTS_DIR, SweepOutcome, run_cells
 
 __all__ = ["GridDef", "GRIDS", "run_grid", "summarize_results", "DQN_PARAMS_PATH"]
 
 ALGOS = ["EDF-FS", "EDF-SS", "LLF", "LALF"]
 DQN_PARAMS_PATH = os.path.join("artifacts", "dqn_params.npz")
+
+#: scenario_matrix row order — fixed here (not registry-sorted) so adding a
+#: scenario later cannot silently reshuffle the checked-in baseline.
+SCENARIO_ORDER = (
+    "paper-diurnal",
+    "trace-scaled",
+    "bursty-mmpp",
+    "heavy-tail-lognormal",
+    "heavy-tail-pareto",
+    "weekend-flat",
+)
 
 Rows = List[Dict[str, Any]]
 
@@ -364,6 +382,104 @@ def _fig11_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
 
 
 # ----------------------------------------------------------------------
+# fleet_scaling — N heterogeneous GPUs x dispatcher, paper-diurnal scenario.
+# The 1xA100/round-robin cells double as the fleet-vs-single bit-identity
+# anchor: their aggregates must equal the single-MIG path at the same seeds.
+
+_FLEETS: List[Tuple[str, List[str]]] = [
+    ("1xA100", ["a100-250w"]),
+    ("2xA100", ["a100-250w"] * 2),
+    ("4xA100", ["a100-250w"] * 4),
+    ("2xA100+2xA30", ["a100-250w", "a100-250w", "a30-165w", "a30-165w"]),
+]
+_FLEET_DISPATCHERS = ("round-robin", "least-loaded", "energy-greedy")
+
+
+def _fleet_scaling_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for fname, profiles in _FLEETS:
+        for disp in _FLEET_DISPATCHERS:
+            for k in range(iters):
+                cells.append(
+                    make_fleet_cell(
+                        experiment="fleet_scaling",
+                        group=f"{fname}:{disp}",
+                        profiles=profiles,
+                        dispatcher=disp,
+                        scheduler="EDF-SS",
+                        scenario="paper-diurnal",
+                        seed=31_000 + k,
+                        policy="static",
+                        policy_kwargs={"config_id": 3},
+                    )
+                )
+    return cells
+
+
+def _fleet_scaling_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    per = group_results(cells, results)
+    table, _a = et_table(per)
+    rows: Rows = []
+    for fname, profiles in _FLEETS:
+        for disp in _FLEET_DISPATCHERS:
+            g = f"{fname}:{disp}"
+            rows.append(
+                {
+                    "fleet": fname,
+                    "devices": len(profiles),
+                    "dispatcher": disp,
+                    "ET": table[g],
+                    **summarize_results(per[g]),
+                }
+            )
+    return rows
+
+
+# ----------------------------------------------------------------------
+# scenario_matrix — every registered scenario x the four schedulers
+
+
+def _scenario_matrix_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for si, sname in enumerate(SCENARIO_ORDER):
+        for n in ALGOS:
+            for k in range(iters):
+                cells.append(
+                    make_scenario_cell(
+                        experiment="scenario_matrix",
+                        group=f"{sname}:{n}",
+                        scheduler=n,
+                        scenario=sname,
+                        seed=52_000 + 101 * si + k,
+                        policy="static",
+                        policy_kwargs={"config_id": 3},
+                    )
+                )
+    return cells
+
+
+def _scenario_matrix_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for sname in SCENARIO_ORDER:
+        per = {n: grouped[f"{sname}:{n}"] for n in ALGOS}
+        t, _ = et_table(per)
+        all_rs = [r for n in ALGOS for r in per[n]]
+        rows.append(
+            {
+                "scenario": sname,
+                **{n: t[n] for n in ALGOS},
+                "energy_wh": sum(r.energy_wh for r in all_rs) / len(all_rs),
+                "avg_tardiness": sum(r.avg_tardiness for r in all_rs) / len(all_rs),
+                "num_jobs": sum(r.num_jobs for r in all_rs) / len(all_rs),
+            }
+        )
+    return rows
+
+
+# ----------------------------------------------------------------------
 # smoke — a compact CI grid (subset of the Table II basket)
 
 
@@ -399,6 +515,8 @@ GRIDS: Dict[str, GridDef] = {
         GridDef("fig9_fig10_split", "Figs. 9-10: ET per config across inference splits", _fig9_cells, _fig9_aggregate),
         GridDef("table3_repartitioning", "Table III: repartitioning models", _table3_cells, _table3_aggregate),
         GridDef("fig11_preferences", "Fig. 11: preferred configs per 4h interval", _fig11_cells, _fig11_aggregate),
+        GridDef("fleet_scaling", "Fleet: N heterogeneous GPUs x dispatcher", _fleet_scaling_cells, _fleet_scaling_aggregate),
+        GridDef("scenario_matrix", "Scenario library x the four schedulers", _scenario_matrix_cells, _scenario_matrix_aggregate),
         GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),
     ]
 }

@@ -84,6 +84,12 @@ def run_cells(
     if policy_factory is not None:
         cache_obj = None
 
+    if cache_obj is not None and resume:
+        # refuse to resume over a cache written under a different SIM_VERSION
+        # (raises StaleCacheError) — silent semantics-mixing is the one
+        # failure mode a content-addressed cache cannot flag per-cell
+        cache_obj.check_version()
+
     t0 = time.perf_counter()
     cells = list(cells)
     hashes = [cell_hash(c) for c in cells]

@@ -1,0 +1,330 @@
+"""Fleet layer: dispatch, heterogeneous devices, aggregation, sweep cells.
+
+The headline invariant — a 1-GPU fleet on the paper-diurnal scenario is
+bit-identical to the single-MIG path — is pinned here and by the
+``fleet_scaling`` baseline gate in CI.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.power import A30_165W
+from repro.core.rl.env import FEATURE_DIM, FLEET_FEATURE_DIM, fleet_state_features
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import MIGSimulator, StaticPolicy
+from repro.core.slices import A30_CONFIGS
+from repro.core.workload import WorkloadSpec, generate_jobs
+from repro.fleet import (
+    DEVICE_PROFILES,
+    DISPATCHERS,
+    FleetSimulator,
+    FleetSpec,
+    aggregate_sim_results,
+    device_profile,
+    dispatch_jobs,
+    make_dispatcher,
+)
+from repro.sweep import cell_hash, make_cell, make_fleet_cell, run_cell
+
+DAY = WorkloadSpec()
+SHORT = WorkloadSpec(horizon_min=180.0, constant_rate=0.4)
+
+
+def _static_factory(cfg):
+    return lambda i, prof: StaticPolicy(cfg)
+
+
+# ----------------------------------------------------------------------
+# devices
+
+
+def test_device_profiles_registry():
+    assert {"a100-250w", "a30-165w"} <= set(DEVICE_PROFILES)
+    a100 = device_profile("a100-250w")
+    a30 = device_profile("a30-165w")
+    assert a100.total_slots == 7
+    assert a30.total_slots == 4
+    assert a30.power is A30_165W
+    assert a30.configs is A30_CONFIGS or dict(a30.configs) == dict(A30_CONFIGS)
+    assert a30.default_config in a30.configs
+    with pytest.raises(KeyError):
+        device_profile("h100-apocryphal")
+
+
+def test_a30_table_is_valid_for_the_simulator():
+    jobs = generate_jobs(SHORT, 1)
+    prof = device_profile("a30-165w")
+    sim = MIGSimulator(
+        make_scheduler("EDF-SS"), power_model=prof.power, config_table=prof.configs
+    )
+    res = sim.run(jobs, policy=StaticPolicy(prof.default_config))
+    assert res.num_jobs == len(jobs)
+    # choosing an A100-only config id on an A30 must fail loudly
+    sim2 = MIGSimulator(make_scheduler("EDF-SS"), config_table=prof.configs)
+    with pytest.raises(KeyError, match="device's table"):
+        sim2.run(generate_jobs(SHORT, 2), policy=StaticPolicy(12))
+
+
+# ----------------------------------------------------------------------
+# dispatch
+
+
+def test_round_robin_cycles():
+    jobs = generate_jobs(SHORT, 3)
+    profiles = [device_profile("a100-250w")] * 3
+    assignments, trace = dispatch_jobs(jobs, profiles, make_dispatcher("round-robin"))
+    assert assignments == [i % 3 for i in range(len(jobs))]
+    assert len(trace) == len(jobs)
+
+
+def test_least_loaded_balances():
+    jobs = generate_jobs(DAY, 4)
+    profiles = [device_profile("a100-250w")] * 2
+    assignments, _ = dispatch_jobs(jobs, profiles, make_dispatcher("least-loaded"))
+    counts = [assignments.count(i) for i in range(2)]
+    assert all(c > 0 for c in counts)
+    assert abs(counts[0] - counts[1]) < 0.5 * len(jobs)
+
+
+def test_energy_greedy_packs_when_idle_fleet():
+    """On a lightly loaded fleet the marginal-power rule keeps reusing the
+    already-hot device instead of spreading (concave Fig. 3 curve)."""
+    jobs = generate_jobs(WorkloadSpec(horizon_min=120.0, constant_rate=0.1), 5)
+    profiles = [device_profile("a100-250w")] * 3
+    assignments, _ = dispatch_jobs(jobs, profiles, make_dispatcher("energy-greedy"))
+    assert len(set(assignments)) == 1
+
+
+def test_energy_greedy_spills_under_overload():
+    """Packing must not starve the fleet: once a device's estimated backlog
+    crosses the spill threshold, work flows to the other devices instead of
+    queueing unboundedly on one GPU."""
+    jobs = generate_jobs(WorkloadSpec(horizon_min=240.0, constant_rate=2.0), 8)
+    profiles = [device_profile("a100-250w")] * 3
+    assignments, _ = dispatch_jobs(jobs, profiles, make_dispatcher("energy-greedy"))
+    assert len(set(assignments)) == 3, "overload must reach every device"
+
+
+def test_dispatch_requires_sorted_arrivals():
+    jobs = generate_jobs(SHORT, 6)[:4]
+    jobs = [jobs[1], jobs[0]] + jobs[2:]
+    with pytest.raises(ValueError, match="sorted"):
+        dispatch_jobs(jobs, [device_profile("a100-250w")], make_dispatcher("round-robin"))
+
+
+def test_dispatcher_registry():
+    assert set(DISPATCHERS) == {"round-robin", "least-loaded", "energy-greedy"}
+    with pytest.raises(KeyError):
+        make_dispatcher("clairvoyant")
+
+
+# ----------------------------------------------------------------------
+# fleet simulation
+
+
+def test_one_gpu_fleet_bit_identical_to_single_path():
+    single = MIGSimulator(make_scheduler("EDF-SS")).run(
+        generate_jobs(DAY, 42), policy=StaticPolicy(3)
+    )
+    fleet = FleetSimulator(FleetSpec.of(["a100-250w"])).run(
+        generate_jobs(DAY, 42), policy_factory=_static_factory(3)
+    )
+    agg = fleet.aggregate
+    for field in dataclasses.fields(type(single)):
+        if field.name == "extra":
+            continue
+        assert getattr(agg, field.name) == getattr(single, field.name), field.name
+    assert agg.extra["makespan_min"] == single.extra["makespan_min"]
+    assert agg.extra["tardiness_integral"] == single.extra["tardiness_integral"]
+
+
+def test_fleet_conservation_and_aggregation():
+    jobs = generate_jobs(DAY, 9)
+    fleet = FleetSimulator(
+        FleetSpec.of(["a100-250w", "a100-250w", "a30-165w"], dispatcher="least-loaded")
+    ).run(jobs, policy_factory=lambda i, p: StaticPolicy(p.default_config))
+    assert sum(fleet.dispatch_counts) == len(jobs)
+    assert fleet.aggregate.num_jobs == len(jobs)
+    assert fleet.aggregate.energy_wh == pytest.approx(
+        sum(r.energy_wh for r in fleet.per_device)
+    )
+    assert fleet.aggregate.total_tardiness == pytest.approx(
+        sum(r.total_tardiness for r in fleet.per_device)
+    )
+    assert fleet.aggregate.extra["makespan_min"] == max(
+        r.extra["makespan_min"] for r in fleet.per_device
+    )
+    # starved-device idle power is reported, not silently dropped
+    assert "fleet_idle_gap_wh" in fleet.aggregate.extra
+    assert fleet.aggregate.extra["fleet_idle_gap_wh"] >= 0.0
+
+
+def test_more_gpus_cut_tardiness():
+    jobs1 = generate_jobs(DAY, 13)
+    jobs4 = generate_jobs(DAY, 13)
+    one = FleetSimulator(FleetSpec.of(["a100-250w"])).run(
+        jobs1, policy_factory=_static_factory(3)
+    )
+    four = FleetSimulator(FleetSpec.of(["a100-250w"] * 4)).run(
+        jobs4, policy_factory=_static_factory(3)
+    )
+    assert four.aggregate.total_tardiness <= one.aggregate.total_tardiness
+
+
+def test_aggregate_requires_results():
+    with pytest.raises(ValueError):
+        aggregate_sim_results([])
+
+
+def test_policies_are_per_device_instances():
+    seen = []
+
+    def factory(i, prof):
+        p = StaticPolicy(3)
+        seen.append(p)
+        return p
+
+    FleetSimulator(FleetSpec.of(["a100-250w"] * 3)).run(
+        generate_jobs(SHORT, 21), policy_factory=factory
+    )
+    assert len(seen) == 3
+    assert len({id(p) for p in seen}) == 3
+
+
+def test_dynamic_policies_adapt_to_a30_table():
+    """daynight/heuristic/DQN emit A100 config ids; on a heterogeneous
+    fleet the device-adapted wrapper must translate them to the A30 table
+    (closest slice count) instead of KeyError-ing mid-run."""
+    from repro.core.simulator import DayNightPolicy
+    from repro.fleet import DeviceAdaptedPolicy
+
+    adapted = DeviceAdaptedPolicy(DayNightPolicy(), A30_CONFIGS)
+    # A100 day config 6 (3 slices) -> A30 config 3 (3 slices);
+    # A100 night config 2 (2 slices) -> A30 config 2 (2 slices)
+    assert adapted._map(6) == 3
+    assert adapted._map(2) == 2
+    assert adapted._map(None) is None
+    assert adapted.initial_config in A30_CONFIGS
+
+    jobs = generate_jobs(DAY, 17)
+    fleet = FleetSimulator(
+        FleetSpec.of(["a100-250w", "a30-165w"], dispatcher="least-loaded")
+    ).run(jobs, policy_factory=lambda i, p: DayNightPolicy())
+    assert fleet.aggregate.num_jobs == len(jobs)
+    assert all(r.repartitions > 0 for r in fleet.per_device), (
+        "both devices must actually follow the day/night schedule"
+    )
+
+
+# ----------------------------------------------------------------------
+# fleet-aware RL observation
+
+
+def test_fleet_state_features_shape_and_range():
+    fs = FleetSimulator(FleetSpec.of(["a100-250w", "a30-165w"], dispatcher="least-loaded"))
+    fs.run(generate_jobs(SHORT, 30), policy_factory=lambda i, p: StaticPolicy(p.default_config))
+    assert FLEET_FEATURE_DIM == FEATURE_DIM + 2
+    for i, sim in enumerate(fs.sims):
+        f = fleet_state_features(90.0, sim, i, fs.view)
+        assert f.shape == (FLEET_FEATURE_DIM,)
+        assert (f >= 0.0).all() and (f <= 1.0).all()
+    # shares across the fleet sum to <= 1 (0 when no backlog at t)
+    shares = [fs.view.load_share(i, 90.0) for i in range(2)]
+    assert sum(shares) <= 1.0 + 1e-9
+    # degrades gracefully without fleet context
+    f0 = fleet_state_features(90.0, fs.sims[0], 0, None)
+    assert f0.shape == (FLEET_FEATURE_DIM,)
+    assert f0[-2] == 0.0 and f0[-1] == 0.0
+
+
+def test_evaluate_policy_fleet_ad_hoc():
+    from repro.core.rl.train import evaluate_policy_fleet
+
+    rs = evaluate_policy_fleet(
+        lambda: StaticPolicy(3),
+        profiles=["a100-250w", "a100-250w"],
+        num_iterations=2,
+        scenario="weekend-flat",
+        scenario_kwargs={"horizon_min": 240.0},
+        seed=77,
+    )
+    assert len(rs) == 2
+    assert all(r.num_jobs > 0 for r in rs)
+
+
+# ----------------------------------------------------------------------
+# sweep cells
+
+
+def test_fleet_cell_roundtrip_and_hash():
+    kw = dict(
+        experiment="t",
+        group="g",
+        profiles=["a100-250w", "a30-165w"],
+        dispatcher="least-loaded",
+        scheduler="EDF-SS",
+        scenario="weekend-flat",
+        scenario_kwargs={"horizon_min": 240.0},
+        seed=5,
+        policy="static",
+        policy_kwargs={"config_id": 3},
+    )
+    cell = make_fleet_cell(**kw)
+    assert cell["fleet"]["dispatcher"] == "least-loaded"
+    # scenario knobs are resolved into the cell (hash captures the values)
+    assert cell["scenario"]["kwargs"]["horizon_min"] == 240.0
+    assert "rate_per_min" in cell["scenario"]["kwargs"]
+    out = run_cell(cell)
+    assert out["num_jobs"] > 0
+    assert len(out["devices"]) == 2
+    assert sum(out["dispatch_counts"]) == out["num_jobs"]
+
+    other = make_fleet_cell(**{**kw, "dispatcher": "round-robin"})
+    assert cell_hash(cell) != cell_hash(other)
+    bigger = make_fleet_cell(**{**kw, "profiles": ["a100-250w"] * 3})
+    assert cell_hash(cell) != cell_hash(bigger)
+
+
+def test_one_gpu_fleet_cell_matches_single_cell_results():
+    """The sweep-level version of the bit-identity invariant: the
+    fleet_scaling 1xA100 cells and the plain single-GPU cells must agree
+    on every aggregate metric."""
+    single = run_cell(
+        make_cell(
+            experiment="t",
+            group="g",
+            scheduler="EDF-SS",
+            workload=DAY,
+            seed=31_000,
+            policy="static",
+            policy_kwargs={"config_id": 3},
+        )
+    )
+    fleet = run_cell(
+        make_fleet_cell(
+            experiment="t",
+            group="g",
+            profiles=["a100-250w"],
+            dispatcher="round-robin",
+            scheduler="EDF-SS",
+            scenario="paper-diurnal",
+            seed=31_000,
+            policy="static",
+            policy_kwargs={"config_id": 3},
+        )
+    )
+    for k in (
+        "energy_wh",
+        "avg_tardiness",
+        "num_jobs",
+        "total_tardiness",
+        "preemptions",
+        "repartitions",
+        "max_tardiness",
+        "deadline_misses",
+        "busy_slot_minutes",
+        "extra",
+        "util_histogram",
+    ):
+        assert fleet[k] == single[k], k

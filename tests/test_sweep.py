@@ -10,9 +10,11 @@ from repro.core.simulator import MIGSimulator, StaticPolicy
 from repro.core.workload import WorkloadSpec, generate_jobs
 from repro.sweep import (
     GRIDS,
+    StaleCacheError,
     SweepCache,
     cell_hash,
     make_cell,
+    make_scenario_cell,
     result_to_sim_result,
     run_cell,
     run_cells,
@@ -132,12 +134,13 @@ def test_cache_rejects_torn_and_foreign_entries(tmp_path):
     assert cache.get(h) == {"energy_wh": 1.0}
 
     # torn write -> treated as a miss, not a crash
-    with open(os.path.join(str(tmp_path), f"{h}.json"), "w") as f:
+    with open(cache._path(h), "w") as f:
         f.write('{"sim_version": "mig-sim')
     assert cache.get(h) is None
 
-    # entry from a different simulator version -> miss
-    with open(os.path.join(str(tmp_path), f"{h}.json"), "w") as f:
+    # hand-copied entry from a different simulator version at the current
+    # version's path -> miss (the payload check backs up the filename)
+    with open(cache._path(h), "w") as f:
         json.dump({"sim_version": "ancient", "cell": cell, "result": {}}, f)
     assert cache.get(h) is None
 
@@ -151,6 +154,118 @@ def test_ad_hoc_policy_bypasses_cache(tmp_path):
     )
     assert out.computed_count == 2
     assert len(SweepCache(cache_dir)) == 0  # nothing persisted
+
+
+def test_resume_refuses_stale_sim_version(tmp_path):
+    """Regression: --resume after a semantics change must refuse, not mix.
+
+    A cache directory holding cells recorded under a different SIM_VERSION
+    (e.g. populated before a bump, or hand-copied) raises StaleCacheError on
+    resume; --no-resume and purge_stale() are the documented ways out.
+    """
+    cache_dir = str(tmp_path / "cache")
+    cells = _tiny_cells(2)
+    run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+
+    # plant entries from a pre-bump version and from the pre-versioned-
+    # filename era; both must trip the refusal
+    with open(os.path.join(cache_dir, "0" * 64 + ".mig-sim-0.json"), "w") as f:
+        json.dump({"sim_version": "mig-sim-0", "cell": {}, "result": {}}, f)
+    with open(os.path.join(cache_dir, "1" * 64 + ".json"), "w") as f:
+        json.dump({"sim_version": "mig-sim-0", "cell": {}, "result": {}}, f)
+
+    with pytest.raises(StaleCacheError, match="different\\s+simulator version"):
+        run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    # the error names the escape hatches
+    with pytest.raises(StaleCacheError, match="purge-stale-cache"):
+        run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+
+    # --no-resume bypasses the cache read and still completes — and must NOT
+    # disarm the refusal on the next resume
+    out = run_cells("t", cells, cache=cache_dir, artifacts_dir=None, resume=False)
+    assert out.computed_count == 2
+    with pytest.raises(StaleCacheError):
+        run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+
+    # purging removes exactly the two foreign entries, then resume works
+    assert SweepCache(cache_dir).purge_stale() == 2
+    out2 = run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    assert (out2.cached_count, out2.computed_count) == (2, 0)
+
+
+def test_clean_cache_resume_still_works(tmp_path):
+    """The version check must not break ordinary warm-cache resumes."""
+    cache_dir = str(tmp_path / "cache")
+    cells = _tiny_cells(3)
+    run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    out = run_cells("t", cells, cache=cache_dir, artifacts_dir=None)
+    assert (out.cached_count, out.computed_count) == (3, 0)
+
+
+def test_cli_purge_without_grid_is_purge_only(tmp_path, capsys):
+    """The StaleCacheError remediation command must purge and exit, not
+    launch the default full-scale sweep."""
+    from repro.sweep.__main__ import main
+
+    cache_dir = str(tmp_path / "cache")
+    os.makedirs(cache_dir)
+    with open(os.path.join(cache_dir, "a" * 64 + ".mig-sim-0.json"), "w") as f:
+        json.dump({"sim_version": "mig-sim-0", "cell": {}, "result": {}}, f)
+    rc = main(["--purge-stale-cache", "--cache-dir", cache_dir])
+    assert rc == 0
+    assert len(SweepCache(cache_dir)) == 0
+    out = capsys.readouterr()
+    assert "purged 1" in out.err
+    assert "###" not in out.out, "no grid must have run"
+
+
+def test_cli_check_baseline_rejects_multiple_grids(tmp_path):
+    from repro.sweep.__main__ import main
+
+    baseline = tmp_path / "b.jsonl"
+    baseline.write_text("")
+    with pytest.raises(SystemExit):
+        main(["smoke", "fleet_scaling", "--check-baseline", str(baseline)])
+
+
+# ----------------------------------------------------------------------
+# scenario cells
+
+
+def test_scenario_cell_resolves_defaults_and_hashes_on_them():
+    a = make_scenario_cell(
+        experiment="t", group="g", scheduler="EDF-SS",
+        scenario="weekend-flat", seed=0,
+    )
+    assert a["scenario"]["kwargs"]["rate_per_min"] == 0.15  # default resolved
+    b = make_scenario_cell(
+        experiment="t", group="g", scheduler="EDF-SS",
+        scenario="weekend-flat", seed=0, scenario_kwargs={"rate_per_min": 0.3},
+    )
+    assert cell_hash(a) != cell_hash(b)
+    with pytest.raises(KeyError):
+        make_scenario_cell(
+            experiment="t", group="g", scheduler="EDF-SS",
+            scenario="weekend-flat", seed=0, scenario_kwargs={"bogus": 1},
+        )
+
+
+def test_paper_diurnal_scenario_cell_matches_workload_cell_results():
+    """Scenario cells and raw-spec cells describe the same physics for the
+    paper workload — their results must agree exactly."""
+    spec_cell = make_cell(
+        experiment="t", group="g", scheduler="EDF-SS",
+        workload=WorkloadSpec(), seed=4,
+        policy="static", policy_kwargs={"config_id": 3},
+    )
+    scen_cell = make_scenario_cell(
+        experiment="t", group="g", scheduler="EDF-SS",
+        scenario="paper-diurnal", seed=4,
+        policy="static", policy_kwargs={"config_id": 3},
+    )
+    a, b = run_cell(spec_cell), run_cell(scen_cell)
+    for k in ("energy_wh", "avg_tardiness", "num_jobs", "preemptions", "extra"):
+        assert a[k] == b[k], k
 
 
 # ----------------------------------------------------------------------
