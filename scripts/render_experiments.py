@@ -1,19 +1,62 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+"""Render, refresh, and check the repo's experiments book (EXPERIMENTS.md).
 
-Usage: PYTHONPATH=src python scripts/render_experiments.py
-Prints markdown to stdout (pasted/refreshed into EXPERIMENTS.md).
+Usage::
+
+    PYTHONPATH=src python scripts/render_experiments.py            # stdout
+    PYTHONPATH=src python scripts/render_experiments.py --write    # refresh EXPERIMENTS.md
+    PYTHONPATH=src python scripts/render_experiments.py --check    # CI gate
+
+Sections and their deterministic inputs:
+
+* **§Calibration** — the queue-depth analysis behind ``M_JOBS = 8``
+  (``repro.core.rl.env``): re-simulated on the spot from pinned seeds.
+* **§Dry-run / §Roofline** — rendered from ``artifacts/dryrun`` records
+  when present, ``pending`` rows otherwise (artifacts are not checked in,
+  so a fresh checkout renders the same ``pending`` state CI sees).
+* **§Perf** — pointers to the benchmark entry points and the nightly
+  trajectory.
+* **§Sweeps** — the grid registry (``repro.sweep.grids``) mapped to paper
+  tables/figures and checked-in baselines.
+* **§Predictive-controller** — aggregated from the checked-in
+  ``benchmarks/baselines/repartition_policies.jsonl``.
+
+``--check`` fails (exit 1) when the checked-in EXPERIMENTS.md differs from
+a fresh render, or when any ``*.md`` referenced from ``src/`` does not
+exist — the docs gate wired into CI.
 """
 
 from __future__ import annotations
 
+import argparse
+import io
 import json
 import os
+import re
 import sys
+from typing import Dict, List, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.analysis.roofline import load_record, model_flops, roofline_row  # noqa: E402
-from repro.launch.shapes import SHAPES, all_cells  # noqa: E402
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+EXPERIMENTS_PATH = os.path.join(REPO_ROOT, "EXPERIMENTS.md")
+POLICY_BASELINE = os.path.join(
+    REPO_ROOT, "benchmarks", "baselines", "repartition_policies.jsonl"
+)
+
+HEADER = """\
+# EXPERIMENTS
+
+The experiments book: calibration analyses, dry-run/roofline tables, the
+sweep-grid map, and predictive-controller results.  **Generated** by
+`scripts/render_experiments.py` — edit the generator, then refresh with
+
+```bash
+PYTHONPATH=src python scripts/render_experiments.py --write
+```
+
+CI runs `--check` and fails when this file is stale or a `*.md` reference
+in `src/` points at a missing document.
+"""
 
 
 def fmt_s(x):
@@ -32,10 +75,94 @@ def fmt_b(x):
     return f"{x/2**30:.2f}"
 
 
-def main() -> None:
-    print("### §Dry-run — compile status and per-device memory\n")
-    print("| arch | shape | pod 16x16 | multi-pod 2x16x16 | args GiB/dev | temp GiB/dev | compile s |")
-    print("|---|---|---|---|---|---|---|")
+# ----------------------------------------------------------------------
+# §Calibration — the m=8 queue-depth analysis
+
+
+def calibration_md() -> str:
+    """Queue-depth distribution under the paper's settings (pinned seeds).
+
+    The paper picks the DQN state depth m = 3 from Alibaba-trace load
+    analysis (§IV-D-1); our §V-A calibration produces deeper peak queues,
+    and this table is the analysis that selects ``M_JOBS`` instead.
+    """
+    from repro.core.rl.env import M_JOBS
+    from repro.core.schedulers import make_scheduler
+    from repro.core.simulator import MIGSimulator, StaticPolicy
+    from repro.core.workload import WorkloadSpec, generate_jobs
+
+    seeds = (0, 1, 2)
+    configs = (3, 6, 12)
+
+    def stats(xs: List[int]) -> Dict[str, float]:
+        xs = sorted(xs)
+        n = len(xs)
+
+        def pct(p: float) -> int:
+            return xs[min(int(p * n), n - 1)] if n else 0
+
+        return {
+            "mean": sum(xs) / max(n, 1),
+            "p50": pct(0.50),
+            "p90": pct(0.90),
+            "p99": pct(0.99),
+            "max": xs[-1] if xs else 0,
+        }
+
+    out = io.StringIO()
+    out.write("## Calibration\n\n")
+    out.write(
+        "Waiting-queue depth at decision events (EDF-SS, paper-diurnal "
+        f"seeds {list(seeds)}, static configurations across the coarseness "
+        "spectrum) — the load analysis that sets the DQN state depth "
+        f"`M_JOBS = {M_JOBS}` in `repro.core.rl.env` (the paper derived "
+        "m = 3 from Alibaba-trace load analysis, §IV-D-1):\n\n"
+    )
+    out.write("| config | mean | p50 | p90 | p99 | max |\n")
+    out.write("|---|---|---|---|---|---|\n")
+    deepest = 0
+    for cfg in configs:
+        depths: List[int] = []
+
+        def hook(t, sim):
+            depths.append(len(sim.queue_snapshot()))
+
+        for seed in seeds:
+            sim = MIGSimulator(make_scheduler("EDF-SS"))
+            sim.run(generate_jobs(WorkloadSpec(), seed), policy=StaticPolicy(cfg),
+                    decision_hook=hook)
+        s = stats(depths)
+        deepest = max(deepest, int(s["max"]))
+        out.write(
+            f"| {cfg} | {s['mean']:.2f} | {s['p50']} | {s['p90']} | "
+            f"{s['p99']} | {s['max']} |\n"
+        )
+    out.write(
+        f"\nm = {M_JOBS} keeps the deepest queue observed anywhere in the "
+        f"configuration spectrum (max {deepest}) fully visible with "
+        "headroom for heavier scenarios, while the paper's m = 3 would "
+        "truncate even the p99 tail of every configuration under our §V-A "
+        "calibration.  The 2+2m layout itself is unchanged from the paper.\n"
+    )
+    return out.getvalue()
+
+
+# ----------------------------------------------------------------------
+# §Dry-run / §Roofline — from artifacts/dryrun records
+
+
+def dryrun_md() -> str:
+    from repro.analysis.roofline import load_record
+    from repro.launch.shapes import all_cells
+
+    out = io.StringIO()
+    out.write("## Dry-run — compile status and per-device memory\n\n")
+    out.write(
+        "Rendered from `artifacts/dryrun/` records (`python -m "
+        "repro.launch.dryrun`); rows are `…` until the artifacts exist.\n\n"
+    )
+    out.write("| arch | shape | pod 16x16 | multi-pod 2x16x16 | args GiB/dev | temp GiB/dev | compile s |\n")
+    out.write("|---|---|---|---|---|---|---|\n")
     n_ok = n_skip = n_fail = 0
     for arch, shape in all_cells():
         pod = load_record(arch, shape.name, False)
@@ -60,33 +187,41 @@ def main() -> None:
             args = pod.get("argument_size_in_bytes")
             temp = pod.get("temp_size_in_bytes")
             comp = pod.get("compile_seconds")
-        print(
+        out.write(
             f"| {arch} | {shape.name} | {s_pod} | {s_mp} | {fmt_b(args)} | "
-            f"{fmt_b(temp)} | {f'{comp:.0f}' if comp else '-'} |"
+            f"{fmt_b(temp)} | {f'{comp:.0f}' if comp else '-'} |\n"
         )
-    print(f"\npod cells: {n_ok} OK, {n_skip} skipped (DESIGN.md §4), {n_fail} failed.\n")
+    out.write(f"\npod cells: {n_ok} OK, {n_skip} skipped (DESIGN.md §4), {n_fail} failed.\n")
+    return out.getvalue()
 
-    print("### §Roofline — per (arch x shape), single pod (256 chips)\n")
-    print("| arch | shape | t_comp | t_mem | t_coll | dominant | MODEL/HLO | roofline frac | note |")
-    print("|---|---|---|---|---|---|---|---|---|")
+
+def roofline_md() -> str:
+    from repro.analysis.roofline import roofline_row
+    from repro.launch.shapes import all_cells
+
+    out = io.StringIO()
+    out.write("## Roofline — per (arch x shape), single pod (256 chips)\n\n")
+    out.write("| arch | shape | t_comp | t_mem | t_coll | dominant | MODEL/HLO | roofline frac | note |\n")
+    out.write("|---|---|---|---|---|---|---|---|---|\n")
     for arch, shape in all_cells():
         row = roofline_row(arch, shape.name)
         if row is None:
-            print(f"| {arch} | {shape.name} | … | | | | | | pending |")
+            out.write(f"| {arch} | {shape.name} | … | | | | | | pending |\n")
             continue
         if row.get("skipped"):
-            print(f"| {arch} | {shape.name} | skip | | | | | | {row.get('reason','')} |")
+            out.write(f"| {arch} | {shape.name} | skip | | | | | | {row.get('reason','')} |\n")
             continue
         if row.get("failed"):
-            print(f"| {arch} | {shape.name} | FAIL | | | | | | |")
+            out.write(f"| {arch} | {shape.name} | FAIL | | | | | | |\n")
             continue
         note = _note(row)
-        print(
+        out.write(
             f"| {arch} | {shape.name} | {fmt_s(row['t_compute_s'])} | "
             f"{fmt_s(row['t_memory_s'])} | {fmt_s(row['t_collective_s'])} | "
             f"{row['dominant']} | {row['useful_ratio']:.2f} | "
-            f"{row['roofline_fraction']:.2%} | {note} |"
+            f"{row['roofline_fraction']:.2%} | {note} |\n"
         )
+    return out.getvalue()
 
 
 def _note(row) -> str:
@@ -100,5 +235,225 @@ def _note(row) -> str:
     return "reshard to shrink collective payload / overlap with compute"
 
 
+# ----------------------------------------------------------------------
+# §Perf
+
+
+def perf_md() -> str:
+    return (
+        "## Perf\n\n"
+        "Kernel and end-to-end performance entry points (numbers live in\n"
+        "artifacts and the nightly trajectory, not in this file):\n\n"
+        "* `python -m benchmarks.kernels_bench` — Pallas kernels vs reference\n"
+        "  einsum paths (flash attention, Mamba scan, mLSTM, MoE grouped\n"
+        "  matmul); collective overlap notes live in\n"
+        "  `repro/models/transformer.py`.\n"
+        "* `python -m benchmarks.run --scale 4 --workers 8` — the paper-table\n"
+        "  battery through the sweep engine (the reference EXPERIMENTS\n"
+        "  battery used `--scale 4`).\n"
+        "* `BENCH_nightly.json` — per-grid wall-clock / cache-hit trajectory\n"
+        "  appended by `scripts/bench_nightly.py` from the nightly workflow.\n"
+        "* DQN reference trainings use 900+ episodes\n"
+        "  (`examples/dynamic_repartitioning_day.py`); short trainings\n"
+        "  underperform the heuristic baseline.\n"
+    )
+
+
+# ----------------------------------------------------------------------
+# §Sweeps — grid registry -> paper anchors -> baselines
+
+GRID_ANCHORS = {
+    "table2_schedulers": "Table II",
+    "fig4_preemption": "Fig. 4",
+    "fig6_utilization": "Fig. 6",
+    "fig7_fig8_arrival": "Figs. 7-8",
+    "fig9_fig10_split": "Figs. 9-10",
+    "table3_repartitioning": "Table III",
+    "fig11_preferences": "Fig. 11",
+    "fleet_scaling": "beyond-paper (fleet)",
+    "scenario_matrix": "beyond-paper (scenarios)",
+    "repartition_policies": "beyond-paper (§V-C conjecture)",
+    "smoke": "CI smoke (Table II subset)",
+}
+
+
+def sweeps_md() -> str:
+    from repro.sweep.grids import GRIDS
+
+    out = io.StringIO()
+    out.write("## Sweeps — grid → paper table/figure map\n\n")
+    out.write(
+        "Run any grid with `python -m repro.sweep <grid> --workers 4`; CI\n"
+        "gates the baselined grids at `--scale 0.1` (see CONTRIBUTING.md for\n"
+        "the regeneration recipe after a `SIM_VERSION` bump).\n\n"
+    )
+    out.write("| grid | reproduces | baseline | description |\n")
+    out.write("|---|---|---|---|\n")
+    for name in sorted(GRIDS):
+        grid = GRIDS[name]
+        baseline = ""
+        for candidate in (f"{name}.jsonl", "smoke_sweep.jsonl" if name == "smoke" else ""):
+            if candidate and os.path.exists(
+                os.path.join(REPO_ROOT, "benchmarks", "baselines", candidate)
+            ):
+                baseline = f"`benchmarks/baselines/{candidate}`"
+                break
+        out.write(
+            f"| `{name}` | {GRID_ANCHORS.get(name, '')} | {baseline} | {grid.doc} |\n"
+        )
+    return out.getvalue()
+
+
+# ----------------------------------------------------------------------
+# §Predictive-controller — from the checked-in baseline
+
+
+def predictive_md() -> str:
+    out = io.StringIO()
+    out.write("## Predictive-controller results\n\n")
+    out.write(
+        "The paper closes observing that preferred configurations recur at\n"
+        "specific times of day, \"suggesting a policy for predictive and\n"
+        "automatic reconfiguration\" (§V-C).  `repro.forecast` implements\n"
+        "that policy family: a Fourier day-model + EWMA bias forecaster\n"
+        "driving a model-predictive controller that rolls a fluid/queueing\n"
+        "approximation forward per candidate configuration (lateness priced\n"
+        "from a pinned §V-A job sample, M/G/c stochastic-wait correction,\n"
+        "duty-cycle-correct energy) and repartitions under asymmetric\n"
+        "hysteresis.  Default candidate set: the Fig.-11 coarse family\n"
+        "`(1, 2, 3)` — full GPU overnight (race-to-idle), 4g+3g shoulders,\n"
+        "4g+2g+1g through the plateau.\n\n"
+    )
+    if not os.path.exists(POLICY_BASELINE):
+        out.write("*(baseline `repartition_policies.jsonl` not yet generated)*\n")
+        return out.getvalue()
+
+    from repro.sweep.grids import GRIDS
+
+    cells, results = [], []
+    with open(POLICY_BASELINE) as f:
+        for line in f:
+            if line.strip():
+                rec = json.loads(line)
+                cells.append(rec["cell"])
+                results.append(rec["result"])
+    rows = GRIDS["repartition_policies"].aggregate(cells, results)
+
+    families = [
+        k[len("ET_"):] for k in rows[0] if k.startswith("ET_")
+    ]
+    out.write(
+        "ET per policy family × scenario (shared per-scenario scaling "
+        "factor `a`; lower is better) from the checked-in `--scale 0.1` "
+        "baseline:\n\n"
+    )
+    out.write("| scenario | " + " | ".join(families) + " | forecast beats static |\n")
+    out.write("|---|" + "---|" * (len(families) + 1) + "\n")
+    for row in rows:
+        cells_md = " | ".join(f"{row['ET_' + f]:.4f}" for f in families)
+        beats = "**yes**" if row["forecast_beats_static"] else "no"
+        out.write(f"| {row['scenario']} | {cells_md} | {beats} |\n")
+    paper_row = next(r for r in rows if r["scenario"] == "paper-diurnal")
+    out.write(
+        "\nOn the paper's own workload the predictive controller beats\n"
+        "static partitioning on ET while repartitioning ~"
+        f"{paper_row['repartitions_Forecast']:.0f}"
+        f" times/day (vs ~{paper_row['repartitions_Heuristic']:.0f} for the\n"
+        "reactive queue heuristic, which stays the envelope on most\n"
+        "scenarios by exploiting instant reaction to\n"
+        "every queue change).  The heavy-tail scenarios break the §V-A\n"
+        "job-mix assumptions baked into the controller's lateness curves and\n"
+        "stay static-equivalent — the open head-room the DQN (and a\n"
+        "retrained lateness sample) can chase.  Regenerate with\n"
+        "`python -m repro.sweep repartition_policies --scale 0.1` and\n"
+        "compare via `--check-baseline`.\n"
+    )
+    return out.getvalue()
+
+
+# ----------------------------------------------------------------------
+# document assembly + checks
+
+
+def build_markdown() -> str:
+    parts = [
+        HEADER,
+        calibration_md(),
+        dryrun_md(),
+        roofline_md(),
+        perf_md(),
+        sweeps_md(),
+        predictive_md(),
+    ]
+    return "\n".join(part.rstrip() + "\n" for part in parts)
+
+
+# any path-qualified or bare markdown reference; the matched path is
+# resolved verbatim against the repo root (no prefix stripping), so a
+# subdirectory-qualified reference is checked at exactly that path
+_MD_REF = re.compile(r"\b((?:[A-Za-z0-9_.-]+/)*[A-Za-z][\w.-]*\.md)\b")
+
+
+def check_doc_refs(root: str = REPO_ROOT) -> List[Tuple[str, str]]:
+    """Dangling ``*.md`` references in ``src/`` (and ``scripts/``)."""
+    dangling: List[Tuple[str, str]] = []
+    for base in ("src", "scripts"):
+        for dirpath, dirnames, filenames in os.walk(os.path.join(root, base)):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8") as f:
+                    text = f.read()
+                for ref in sorted(set(_MD_REF.findall(text))):
+                    if not os.path.exists(os.path.join(root, ref)):
+                        dangling.append((os.path.relpath(path, root), ref))
+    return dangling
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="write EXPERIMENTS.md at the repo root")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if EXPERIMENTS.md is stale or a doc reference dangles")
+    args = ap.parse_args(argv)
+
+    rendered = build_markdown()
+
+    if args.check:
+        failed = False
+        dangling = check_doc_refs()
+        for path, ref in dangling:
+            print(f"DANGLING DOC REF: {path} references missing {ref}", file=sys.stderr)
+            failed = True
+        if not os.path.exists(EXPERIMENTS_PATH):
+            print("EXPERIMENTS.md does not exist; run --write", file=sys.stderr)
+            failed = True
+        else:
+            with open(EXPERIMENTS_PATH, encoding="utf-8") as f:
+                current = f.read()
+            if current != rendered:
+                print(
+                    "EXPERIMENTS.md is stale: regenerate with "
+                    "`PYTHONPATH=src python scripts/render_experiments.py --write`",
+                    file=sys.stderr,
+                )
+                failed = True
+        if not failed:
+            print("EXPERIMENTS.md up to date; all doc references resolve")
+        return 1 if failed else 0
+
+    if args.write:
+        with open(EXPERIMENTS_PATH, "w", encoding="utf-8") as f:
+            f.write(rendered)
+        print(f"wrote {EXPERIMENTS_PATH}")
+        return 0
+
+    print(rendered, end="")
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -74,6 +74,11 @@ def train_dqn(
             jobs = generate_jobs(spec, seed=ep_seed)
         agent.begin_episode(learner.epsilon(ep))
         agent.use_guide = guide is not None and ep < guide_episodes
+        if agent.use_guide and hasattr(guide, "reset"):
+            # stateful demonstration policies (e.g. the predictive
+            # ForecastPolicy: EWMA bias, dwell clocks) start each episode
+            # clean, exactly as a fresh simulated day would see them
+            guide.reset()
         result = sim.run(jobs, policy=agent)
         agent.end_episode(sim)
         ep_rewards.append(agent.episode_reward)

@@ -45,7 +45,7 @@ __all__ = [
 # numbers a run produces (event ordering, power model wiring, penalty, ...);
 # the sweep cache (repro.sweep) keys cells on it so stale results never
 # survive a semantics change.
-SIM_VERSION = "mig-sim-1"
+SIM_VERSION = "mig-sim-2"
 
 # §IV-D-3: destroying/recreating MIG slices takes ~4 seconds.
 REPARTITION_PENALTY_MIN = 4.0 / 60.0

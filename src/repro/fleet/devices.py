@@ -35,6 +35,7 @@ class DeviceProfile:
         return max(p.total_slots for p in self.configs.values())
 
     def config_ids(self) -> Tuple[int, ...]:
+        """Valid partition ids of this device's table, ascending."""
         return tuple(sorted(self.configs))
 
 
@@ -49,6 +50,7 @@ DEVICE_PROFILES: Dict[str, DeviceProfile] = {
 
 
 def device_profile(name: str) -> DeviceProfile:
+    """Look up a registered :class:`DeviceProfile` by name."""
     try:
         return DEVICE_PROFILES[name]
     except KeyError as e:

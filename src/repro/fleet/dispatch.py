@@ -71,6 +71,8 @@ class DeviceLoadState:
 
 
 class Dispatcher(Protocol):
+    """Routing strategy: picks a device index per arriving job."""
+
     name: str
 
     def pick(self, job: Job, t: float, states: Sequence[DeviceLoadState]) -> int:
@@ -79,21 +81,27 @@ class Dispatcher(Protocol):
 
 
 class RoundRobinDispatcher:
+    """Arrival index modulo fleet size — the order-only baseline."""
+
     name = "round-robin"
 
     def __init__(self) -> None:
         self._k = 0
 
     def pick(self, job: Job, t: float, states: Sequence[DeviceLoadState]) -> int:
+        """Next device in rotation, ignoring load and hardware."""
         i = self._k % len(states)
         self._k += 1
         return i
 
 
 class LeastLoadedDispatcher:
+    """Smallest normalized backlog (backlog over peak slot count)."""
+
     name = "least-loaded"
 
     def pick(self, job: Job, t: float, states: Sequence[DeviceLoadState]) -> int:
+        """Device with the least estimated work per unit of capacity."""
         return min(range(len(states)), key=lambda i: (states[i].normalized_load, i))
 
 
@@ -114,6 +122,7 @@ class EnergyGreedyDispatcher:
     SPILL_BACKLOG_MIN = 30.0
 
     def pick(self, job: Job, t: float, states: Sequence[DeviceLoadState]) -> int:
+        """Open device with the cheapest marginal watt for one more slot."""
         def marginal_watts(i: int) -> float:
             st = states[i]
             power = st.profile.power
@@ -138,6 +147,7 @@ DISPATCHERS: Dict[str, Callable[[], Dispatcher]] = {
 
 
 def make_dispatcher(name: str) -> Dispatcher:
+    """Fresh dispatcher instance by registry name (they carry state)."""
     try:
         return DISPATCHERS[name]()
     except KeyError as e:

@@ -82,6 +82,7 @@ class FleetResult:
 
     @property
     def num_devices(self) -> int:
+        """Fleet size of the run that produced this result."""
         return len(self.per_device)
 
 
@@ -106,6 +107,7 @@ class FleetView:
         return self._backlogs[i] if i >= 0 else None
 
     def load_share(self, device_index: int, t: float) -> float:
+        """Device's fraction of the estimated fleet backlog just before ``t``."""
         rec = self._at(t)
         if rec is None:
             return 0.0
@@ -113,6 +115,7 @@ class FleetView:
         return rec[device_index] / total if total > 0.0 else 0.0
 
     def total_load_norm(self, t: float) -> float:
+        """Fleet backlog in device-minutes, normalized+clipped to [0, 1]."""
         rec = self._at(t)
         if rec is None:
             return 0.0
@@ -184,9 +187,11 @@ class DeviceAdaptedPolicy:
         )
 
     def decide(self, t: float, sim: MIGSimulator) -> Optional[int]:
+        """Inner policy's choice, translated onto this device's table."""
         return self._map(self.inner.decide(t, sim))
 
     def next_timer(self, t: float) -> Optional[float]:
+        """Pass through the inner policy's timer chain unchanged."""
         return self.inner.next_timer(t)
 
 
@@ -219,6 +224,13 @@ class FleetSimulator:
         policy_factory: PolicyFactory,
         decision_hook: Optional[Callable[[int, float, MIGSimulator], None]] = None,
     ) -> FleetResult:
+        """Dispatch ``jobs`` across the fleet and simulate every device.
+
+        ``decision_hook(device_index, t, sim)`` fires at each per-device
+        decision point (the fleet-aware RL observation path).  Returns the
+        aggregated :class:`FleetResult`; per-device simulators stay on
+        ``self.sims`` for inspection.
+        """
         dispatcher = make_dispatcher(self.spec.dispatcher)
         assignments, trace = dispatch_jobs(jobs, self.profiles, dispatcher)
         self.view = FleetView(trace, self.profiles)

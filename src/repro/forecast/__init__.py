@@ -1,0 +1,54 @@
+"""Predictive repartitioning: arrival forecasting + model-predictive control.
+
+The paper closes on the observation that preferred MIG configurations recur
+at specific times of day, "suggesting a policy for predictive and automatic
+reconfiguration" (§V-C, Fig. 11).  This package implements that conjectured
+policy family as a measurable baseline:
+
+* :mod:`repro.forecast.forecaster` — arrival-rate forecasting: a diurnal
+  Fourier day-model fitted by least squares on any registered scenario's
+  arrival stream (:func:`fit_scenario_forecaster`), corrected online by an
+  EWMA bias tracker that watches realized arrivals during the simulated day;
+* :mod:`repro.forecast.policy` — :class:`ForecastPolicy`, a model-predictive
+  :class:`~repro.core.simulator.RepartitionPolicy`: at each decision event it
+  rolls a fluid approximation of the MIG queue forward over a lookahead
+  horizon for every candidate configuration, charges the §IV-D-3 repartition
+  penalty, and picks the configuration minimizing predicted ET (energy +
+  tardiness scalarization), with dwell-time and improvement-margin hysteresis
+  so the 4 s penalty always amortizes.
+
+The policy is registered as ``"forecast"`` in the sweep policy registry
+(:data:`repro.sweep.cells.POLICIES`), compared against the other policy
+families by the ``repartition_policies`` grid, usable per-device inside a
+fleet (natively via :func:`device_forecast_factory`, or through
+:class:`repro.fleet.DeviceAdaptedPolicy` translation on non-A100 tables),
+and accepted as a ``train_dqn(guide=...)`` demonstration policy to
+warm-start the DQN.  See EXPERIMENTS.md §Predictive-controller for measured
+results and docs/ARCHITECTURE.md for where the layer sits.
+"""
+
+from repro.forecast.forecaster import (
+    ArrivalForecaster,
+    EWMABiasTracker,
+    FourierDayModel,
+    fit_fourier_day_model,
+    fit_scenario_forecaster,
+)
+from repro.forecast.policy import (
+    EFFECTIVE_THROUGHPUT,
+    ForecastPolicy,
+    device_forecast_factory,
+    expected_throughput,
+)
+
+__all__ = [
+    "ArrivalForecaster",
+    "EWMABiasTracker",
+    "FourierDayModel",
+    "fit_fourier_day_model",
+    "fit_scenario_forecaster",
+    "EFFECTIVE_THROUGHPUT",
+    "ForecastPolicy",
+    "device_forecast_factory",
+    "expected_throughput",
+]

@@ -27,11 +27,18 @@ from repro.sweep.cells import (
     result_to_sim_result,
     run_cell,
 )
-from repro.sweep.grids import GRIDS, GridDef, run_grid, summarize_results
+from repro.sweep.grids import (
+    GRIDS,
+    POLICY_FAMILIES,
+    GridDef,
+    run_grid,
+    summarize_results,
+)
 from repro.sweep.runner import SweepOutcome, run_cells
 
 __all__ = [
     "GRIDS",
+    "POLICY_FAMILIES",
     "GridDef",
     "StaleCacheError",
     "SweepCache",

@@ -49,6 +49,8 @@ def _split_entry_name(name: str) -> Optional[Tuple[str, str]]:
 
 
 class SweepCache:
+    """Content-addressed on-disk memo of finished cells (see module doc)."""
+
     def __init__(self, root: str = DEFAULT_CACHE_DIR) -> None:
         self.root = root
         self.hits = 0
@@ -75,6 +77,7 @@ class SweepCache:
         return payload["result"]
 
     def put(self, key: str, cell: Dict[str, Any], result: Dict[str, Any]) -> None:
+        """Atomically persist one finished cell under the current version."""
         os.makedirs(self.root, exist_ok=True)
         payload = {"sim_version": SIM_VERSION, "cell": cell, "result": result}
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")

@@ -78,6 +78,31 @@ def _heuristic_policy() -> RepartitionPolicy:
     return queue_heuristic_policy()
 
 
+def _forecast_policy(
+    scenario: str = "paper-diurnal",
+    train_seeds: int = 8,
+    harmonics: int = 3,
+    scenario_kwargs: Optional[Mapping[str, Any]] = None,
+    **policy_kwargs: Any,
+) -> RepartitionPolicy:
+    """Predictive MPC controller, forecaster fitted on ``scenario``.
+
+    The Fourier day-model fit is deterministic and cached per process
+    (:func:`repro.forecast.fit_scenario_forecaster`), so sweep workers pay
+    the training-day generation once; the policy instance itself is fresh
+    per cell (it carries EWMA/dwell state).
+    """
+    from repro.forecast import ArrivalForecaster, ForecastPolicy, fit_scenario_forecaster
+
+    model = fit_scenario_forecaster(
+        scenario=scenario,
+        train_seeds=train_seeds,
+        harmonics=harmonics,
+        scenario_kwargs=tuple(sorted(dict(scenario_kwargs or {}).items())),
+    )
+    return ForecastPolicy(ArrivalForecaster(model), **policy_kwargs)
+
+
 POLICIES: Dict[str, Callable[..., RepartitionPolicy]] = {
     "static": lambda config_id=3: StaticPolicy(config_id),
     "nomig": lambda: NoMIGPolicy(),
@@ -86,10 +111,12 @@ POLICIES: Dict[str, Callable[..., RepartitionPolicy]] = {
     ),
     "heuristic": _heuristic_policy,
     "dqn": _dqn_policy,
+    "forecast": _forecast_policy,
 }
 
 
 def make_policy(name: str, kwargs: Optional[Mapping[str, Any]] = None) -> RepartitionPolicy:
+    """Fresh policy instance from the registry (instances carry run state)."""
     if name not in POLICIES:
         raise KeyError(f"unknown policy {name!r}; registered: {sorted(POLICIES)}")
     # underscore-prefixed kwargs are hash-only annotations (e.g. the weights
@@ -158,6 +185,7 @@ def make_cell(
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
 ) -> Cell:
+    """A single-GPU cell whose jobs come from a raw :class:`WorkloadSpec`."""
     cell = _base_cell(
         experiment=experiment,
         group=group,
@@ -255,6 +283,7 @@ _META_KEYS = frozenset({"experiment", "group"})
 
 
 def cell_hash(cell: Cell, sim_version: str = SIM_VERSION) -> str:
+    """Content hash of the cell's physics + simulator version (cache key)."""
     physics = {k: v for k, v in cell.items() if k not in _META_KEYS}
     payload = canonical_json({"cell": physics, "sim_version": sim_version})
     return hashlib.sha256(payload.encode("utf-8")).hexdigest()

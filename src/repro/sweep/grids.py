@@ -30,7 +30,14 @@ from repro.sweep.cells import (
 )
 from repro.sweep.runner import DEFAULT_ARTIFACTS_DIR, SweepOutcome, run_cells
 
-__all__ = ["GridDef", "GRIDS", "run_grid", "summarize_results", "DQN_PARAMS_PATH"]
+__all__ = [
+    "GridDef",
+    "GRIDS",
+    "POLICY_FAMILIES",
+    "run_grid",
+    "summarize_results",
+    "DQN_PARAMS_PATH",
+]
 
 ALGOS = ["EDF-FS", "EDF-SS", "LLF", "LALF"]
 DQN_PARAMS_PATH = os.path.join("artifacts", "dqn_params.npz")
@@ -51,6 +58,8 @@ Rows = List[Dict[str, Any]]
 
 @dataclasses.dataclass(frozen=True)
 class GridDef:
+    """A declarative sweep: cell enumeration + result aggregation."""
+
     name: str
     doc: str
     build: Callable[[float], List[Cell]]
@@ -480,6 +489,83 @@ def _scenario_matrix_aggregate(cells: List[Cell], results: List[Dict[str, Any]])
 
 
 # ----------------------------------------------------------------------
+# repartition_policies — every repartitioning policy family x scenario.
+# The measurable form of the paper's closing conjecture: the predictive
+# controller (repro.forecast) lines up against no-MIG, static, day/night and
+# the queue heuristic on every registered scenario; the DQN joins whenever
+# trained weights exist (artifacts are not checked in, so CI compares the
+# five deterministic families).  EXPERIMENTS.md §Predictive-controller is
+# rendered from this grid's checked-in baseline.
+
+#: (family name, cell overrides) — fixed row order; forecast cells carry the
+#: scenario name so the day-model is fitted on the same workload it controls.
+POLICY_FAMILIES: List[Tuple[str, Dict[str, Any]]] = [
+    ("NoMIG", {"policy": "nomig", "mig_enabled": False}),
+    ("StaticMIG", {"policy": "static", "policy_kwargs": {"config_id": 3}}),
+    ("DayNightMIG", {"policy": "daynight"}),
+    ("Heuristic", {"policy": "heuristic"}),
+    ("Forecast", {"policy": "forecast"}),
+]
+
+
+def _repartition_policy_models() -> List[Tuple[str, Dict[str, Any]]]:
+    models = list(POLICY_FAMILIES)
+    if os.path.exists(DQN_PARAMS_PATH):
+        models.append(
+            ("DQN", {"policy": "dqn", "policy_kwargs": {"params_path": DQN_PARAMS_PATH}})
+        )
+    return models
+
+
+def _repartition_policies_cells(scale: float) -> List[Cell]:
+    iters = _iters(4, scale, floor=4)
+    cells: List[Cell] = []
+    for si, sname in enumerate(SCENARIO_ORDER):
+        for fname, overrides in _repartition_policy_models():
+            overrides = {k: dict(v) if isinstance(v, dict) else v for k, v in overrides.items()}
+            if overrides.get("policy") == "forecast":
+                overrides["policy_kwargs"] = {"scenario": sname}
+            for k in range(iters):
+                cells.append(
+                    make_scenario_cell(
+                        experiment="repartition_policies",
+                        group=f"{sname}:{fname}",
+                        scheduler="EDF-SS",
+                        scenario=sname,
+                        seed=61_200 + 97 * si + k,
+                        **overrides,
+                    )
+                )
+    return cells
+
+
+def _repartition_policies_aggregate(
+    cells: List[Cell], results: List[Dict[str, Any]]
+) -> Rows:
+    grouped = group_results(cells, results)
+    # families come from the cells being aggregated, NOT the local
+    # filesystem: a checked-in 5-family baseline must aggregate identically
+    # on a machine that happens to have DQN weights on disk
+    families: List[str] = []
+    for cell in cells:
+        fam = cell["group"].split(":", 1)[1]
+        if fam not in families:
+            families.append(fam)
+    rows: Rows = []
+    for sname in SCENARIO_ORDER:
+        per = {f: grouped[f"{sname}:{f}"] for f in families}
+        t, a = et_table(per)
+        row: Dict[str, Any] = {"scenario": sname, "et_a": a}
+        for f in families:
+            rs = per[f]
+            row[f"ET_{f}"] = t[f]
+            row[f"repartitions_{f}"] = sum(r.repartitions for r in rs) / len(rs)
+        row["forecast_beats_static"] = t["Forecast"] < t["StaticMIG"]
+        rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------------
 # smoke — a compact CI grid (subset of the Table II basket)
 
 
@@ -517,6 +603,7 @@ GRIDS: Dict[str, GridDef] = {
         GridDef("fig11_preferences", "Fig. 11: preferred configs per 4h interval", _fig11_cells, _fig11_aggregate),
         GridDef("fleet_scaling", "Fleet: N heterogeneous GPUs x dispatcher", _fleet_scaling_cells, _fleet_scaling_aggregate),
         GridDef("scenario_matrix", "Scenario library x the four schedulers", _scenario_matrix_cells, _scenario_matrix_aggregate),
+        GridDef("repartition_policies", "Policy families x scenarios (incl. predictive controller)", _repartition_policies_cells, _repartition_policies_aggregate),
         GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),
     ]
 }

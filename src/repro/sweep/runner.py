@@ -35,6 +35,8 @@ DEFAULT_ARTIFACTS_DIR = os.path.join("artifacts", "sweeps")
 
 @dataclasses.dataclass
 class SweepOutcome:
+    """Everything one ``run_cells`` call produced, in grid order."""
+
     name: str
     cells: List[Cell]
     hashes: List[str]
@@ -46,6 +48,7 @@ class SweepOutcome:
 
     @property
     def total(self) -> int:
+        """Total cell count (cached + computed)."""
         return len(self.cells)
 
 
