@@ -1,0 +1,128 @@
+"""Micro-benchmark: SimulationEngine event throughput (events/sec).
+
+Runs the paper-diurnal scenario at ``--load-scale 0.1`` (the CI sweep
+sizing) through the steppable engine under a timer-carrying policy
+(Day/Night), so every event class — arrival, completion, critical,
+repartition-complete, policy timer — is exercised.  Reports the best-of
+``--repeats`` throughput, writes it to ``artifacts/bench/engine_events.json``
+(collected into the BENCH_nightly.json trajectory by
+``scripts/bench_nightly.py``), and optionally gates on a floor:
+
+::
+
+    PYTHONPATH=src python scripts/bench_engine.py                  # measure + write
+    PYTHONPATH=src python scripts/bench_engine.py --min-events-per-sec 20000
+    PYTHONPATH=src python scripts/bench_engine.py --dry-run        # print only
+
+``--min-events-per-sec`` is the CI smoke threshold: an engine-refactor
+regression in simulator throughput fails the build instead of landing
+silently.  The floor is deliberately far below developer-laptop numbers —
+it catches order-of-magnitude regressions (accidental O(n²) rescheduling,
+event storms), not scheduler noise on shared runners.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_OUT = os.path.join("artifacts", "bench", "engine_events.json")
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True, check=True
+            ).stdout.strip()
+        )
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def measure(load_scale: float = 0.1, seeds: int = 3, repeats: int = 3) -> dict:
+    """Best-of-``repeats`` engine throughput over ``seeds`` diurnal days."""
+    from repro.core.engine import SimulationEngine
+    from repro.core.scenarios import generate_scenario
+    from repro.core.schedulers import make_scheduler
+    from repro.core.simulator import SIM_VERSION, DayNightPolicy, MIGSimulator
+
+    # generate outside the timed region; each repeat needs a fresh job list
+    # (jobs carry mutable scheduling state)
+    def day(seed):
+        return generate_scenario("paper-diurnal", seed=seed, load_scale=load_scale)
+
+    best_eps = 0.0
+    best = {}
+    for _ in range(repeats):
+        job_lists = [day(s) for s in range(seeds)]
+        events = 0
+        t0 = time.perf_counter()
+        for jobs in job_lists:
+            sim = MIGSimulator(make_scheduler("EDF-SS"))
+            engine = SimulationEngine(sim, policy=DayNightPolicy(), jobs=jobs)
+            engine.drain()
+            engine.result()
+            events += engine.events_processed
+        elapsed = time.perf_counter() - t0
+        eps = events / elapsed if elapsed > 0 else float("inf")
+        if eps > best_eps:
+            best_eps = eps
+            best = {"events": events, "seconds": round(elapsed, 4)}
+    return {
+        "date": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
+        "git_sha": _git_sha(),
+        "sim_version": SIM_VERSION,
+        "scenario": "paper-diurnal",
+        "load_scale": load_scale,
+        "seeds": seeds,
+        "repeats": repeats,
+        **best,
+        "events_per_sec": round(best_eps, 1),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--load-scale", type=float, default=0.1)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--min-events-per-sec", type=float, default=None,
+                    help="fail (exit 1) below this throughput — the CI gate")
+    ap.add_argument("--dry-run", action="store_true", help="print, don't write")
+    args = ap.parse_args(argv)
+
+    entry = measure(args.load_scale, args.seeds, args.repeats)
+    print(json.dumps(entry, indent=2))
+    if not args.dry_run:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(entry, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    if (
+        args.min_events_per_sec is not None
+        and entry["events_per_sec"] < args.min_events_per_sec
+    ):
+        print(
+            f"ENGINE THROUGHPUT REGRESSION: {entry['events_per_sec']:.0f} ev/s "
+            f"< floor {args.min_events_per_sec:.0f} ev/s",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

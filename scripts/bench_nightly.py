@@ -4,9 +4,11 @@ The nightly workflow runs the slow test tier plus the full smoke + fleet +
 scenario sweeps, then calls this script.  It collects the per-grid sidecar
 metadata the sweep runner leaves next to each JSONL artifact
 (``artifacts/sweeps/<grid>.meta.json``: wall-clock, cell counts, cache
-hits) into a single dated entry and appends it to the trajectory file, so
-regressions in sweep wall-clock or cache hit rate show up as a time series
-rather than a one-off log line.
+hits) — plus the engine events/sec micro-benchmark record written by
+``scripts/bench_engine.py`` (``artifacts/bench/engine_events.json``) when
+present — into a single dated entry and appends it to the trajectory file,
+so regressions in sweep wall-clock, cache hit rate, or raw simulator
+throughput show up as a time series rather than a one-off log line.
 
 ::
 
@@ -26,6 +28,7 @@ import sys
 
 DEFAULT_OUT = "BENCH_nightly.json"
 DEFAULT_SWEEPS_DIR = os.path.join("artifacts", "sweeps")
+ENGINE_BENCH_PATH = os.path.join("artifacts", "bench", "engine_events.json")
 
 
 def _git_sha() -> str:
@@ -60,13 +63,22 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
         from repro.core.simulator import SIM_VERSION
     except ImportError:  # pragma: no cover - script usable without install
         SIM_VERSION = "unknown"
-    return {
+    entry = {
         "date": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
         "git_sha": _git_sha(),
         "sim_version": SIM_VERSION,
         "grids": grids,
         "total_wall_s": round(sum(g["wall_s"] for g in grids.values()), 3),
     }
+    if os.path.exists(ENGINE_BENCH_PATH):
+        with open(ENGINE_BENCH_PATH) as f:
+            bench = json.load(f)
+        entry["engine_bench"] = {
+            "events_per_sec": bench.get("events_per_sec"),
+            "events": bench.get("events"),
+            "load_scale": bench.get("load_scale"),
+        }
+    return entry
 
 
 def main(argv=None) -> int:

@@ -9,9 +9,18 @@ Layers:
 * :mod:`repro.core.scenarios`  — named workload scenario registry
 * :mod:`repro.core.metrics`    — §IV-A ET multi-objective metric
 * :mod:`repro.core.schedulers` — §IV-C EDF-FS / EDF-SS / LLF / LALF
-* :mod:`repro.core.simulator`  — event-driven preemptive simulator
+* :mod:`repro.core.engine`     — steppable event engine (step/inject/snapshot)
+* :mod:`repro.core.simulator`  — event-driven preemptive simulator (numeric state + policies)
 * :mod:`repro.core.rl`         — §IV-D DQN dynamic repartitioning (pure JAX)
 """
+
+from repro.core.engine import (
+    EngineEvent,
+    EngineSnapshot,
+    EventKind,
+    SimSnapshot,
+    SimulationEngine,
+)
 
 from repro.core.slices import MIG_CONFIGS, NUM_CONFIGS, Partition, SliceType, config
 from repro.core.power import A100_250W, TPU_V5E_POD, PowerModel
@@ -37,6 +46,11 @@ from repro.core.simulator import (
 )
 
 __all__ = [
+    "EngineEvent",
+    "EngineSnapshot",
+    "EventKind",
+    "SimSnapshot",
+    "SimulationEngine",
     "MIG_CONFIGS",
     "NUM_CONFIGS",
     "Partition",

@@ -1,8 +1,13 @@
 """Reinforcement-learning repartitioning (paper §IV-D): DQN in pure JAX."""
 
 from repro.core.rl.dqn import DQNConfig, DQNLearner, ReplayBuffer
-from repro.core.rl.env import state_features, FEATURE_DIM, RewardWeights
-from repro.core.rl.agent import DQNAgent, greedy_policy
+from repro.core.rl.env import (
+    FEATURE_DIM,
+    RepartitionEnv,
+    RewardWeights,
+    state_features,
+)
+from repro.core.rl.agent import DQNAgent, NStepAccumulator, greedy_policy
 from repro.core.rl.train import train_dqn, evaluate_policy
 
 __all__ = [
@@ -11,8 +16,10 @@ __all__ = [
     "ReplayBuffer",
     "state_features",
     "FEATURE_DIM",
+    "RepartitionEnv",
     "RewardWeights",
     "DQNAgent",
+    "NStepAccumulator",
     "greedy_policy",
     "train_dqn",
     "evaluate_policy",

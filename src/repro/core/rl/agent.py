@@ -3,7 +3,12 @@
 The agent is a :class:`repro.core.simulator.RepartitionPolicy`: at every
 decision event (arrival/completion) it reads the state features, accumulates
 the ET-scalarized reward since its previous decision, stores the transition,
-optionally trains, and returns the chosen configuration.
+optionally trains, and returns the chosen configuration.  Training no
+longer goes through this class — :func:`repro.core.rl.train.train_dqn`
+drives the incremental :class:`~repro.core.rl.env.RepartitionEnv` directly
+— but the agent remains the evaluation-mode policy (``greedy_policy``) the
+sweep registry and fleet runs instantiate, and it still collects replay
+when used as a live policy.
 """
 
 from __future__ import annotations
@@ -19,7 +24,46 @@ from repro.core.rl.env import RewardWeights, state_features
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import MIGSimulator
 
-__all__ = ["DQNAgent", "greedy_policy"]
+__all__ = ["NStepAccumulator", "DQNAgent", "greedy_policy"]
+
+
+class NStepAccumulator:
+    """n-step return bookkeeping shared by the agent and the train loop.
+
+    Transitions are buffered until ``n_step`` rewards have accumulated (or
+    the episode ends), then emitted into the learner's replay with the
+    discounted n-step return and the residual discount ``g`` for the
+    bootstrap term.
+    """
+
+    def __init__(self, n_step: int, gamma: float) -> None:
+        self.n_step = n_step
+        self.gamma = gamma
+        self._pending: collections.deque = collections.deque()
+
+    def push(self, learner: DQNLearner, s, a, r, s_next, done: bool) -> None:
+        """Append ``(s, a, r)``; emit matured transitions into replay."""
+        self._pending.append([s, a, r])
+        if done:
+            # flush everything with the true remaining returns
+            while self._pending:
+                R, g = 0.0, 1.0
+                for (_, _, ri) in self._pending:
+                    R += g * ri
+                    g *= self.gamma
+                s0, a0, _ = self._pending.popleft()
+                learner.observe(s0, a0, R, s_next, True, g)
+        elif len(self._pending) >= self.n_step:
+            R, g = 0.0, 1.0
+            for (_, _, ri) in self._pending:
+                R += g * ri
+                g *= self.gamma
+            s0, a0, _ = self._pending.popleft()
+            learner.observe(s0, a0, R, s_next, False, g)
+
+    def clear(self) -> None:
+        """Drop buffered transitions (episode reset)."""
+        self._pending = collections.deque()
 
 
 class DQNAgent:
@@ -47,7 +91,7 @@ class DQNAgent:
         self._prev_energy = 0.0
         self._prev_tard = 0.0
         self._pending_penalty = 0.0
-        self._nstep: collections.deque = collections.deque()
+        self._nstep = NStepAccumulator(learner.cfg.n_step, learner.cfg.gamma)
         self.episode_reward = 0.0
         self.losses: list = []
 
@@ -59,31 +103,12 @@ class DQNAgent:
         self._prev_energy = 0.0
         self._prev_tard = 0.0
         self._pending_penalty = 0.0
-        self._nstep = collections.deque()
+        self._nstep.clear()
         self.episode_reward = 0.0
         self.losses = []
 
-    # -- n-step bookkeeping ---------------------------------------------
     def _push_nstep(self, s, a, r, s_next, done: bool) -> None:
-        """Append (s, a, r); emit matured n-step transitions into replay."""
-        cfg = self.learner.cfg
-        self._nstep.append([s, a, r])
-        if done:
-            # flush everything with the true remaining returns
-            while self._nstep:
-                R, g = 0.0, 1.0
-                for (_, _, ri) in self._nstep:
-                    R += g * ri
-                    g *= cfg.gamma
-                s0, a0, _ = self._nstep.popleft()
-                self.learner.observe(s0, a0, R, s_next, True, g)
-        elif len(self._nstep) >= cfg.n_step:
-            R, g = 0.0, 1.0
-            for (_, _, ri) in self._nstep:
-                R += g * ri
-                g *= cfg.gamma
-            s0, a0, _ = self._nstep.popleft()
-            self.learner.observe(s0, a0, R, s_next, False, g)
+        self._nstep.push(self.learner, s, a, r, s_next, done)
 
     def end_episode(self, sim: "MIGSimulator") -> None:
         """Flush the terminal transition (done=True)."""

@@ -1,4 +1,4 @@
-"""State representation and reward shaping for the repartitioning DQN.
+"""State, reward, and the incremental environment for the repartitioning DQN.
 
 Paper §IV-D-1: the state concatenates ``2 + 2m`` features — the current MIG
 configuration, the time, and the (deadline, average duration) of the first
@@ -9,17 +9,25 @@ feed the normalized bin indices to the Q-network.
 Reward (§IV-D-3): scalarization of energy and tardiness following the ET
 metric, accumulated between decision events; the repartitioning cost enters
 implicitly through the 4 s blocked-GPU penalty in the simulator.
+
+:class:`RepartitionEnv` is the incremental (``reset()`` / ``step(action)``)
+environment over the steppable :class:`~repro.core.engine.SimulationEngine`:
+the engine pauses at every §IV-D decision point, the env returns the
+observation, and the caller's action resumes the event loop.  Training
+(:func:`repro.core.rl.train.train_dqn`) drives this env directly — no
+full-run ``decision_hook`` harvesting.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, List
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.metrics import SimResult
     from repro.core.simulator import MIGSimulator
     from repro.fleet.simulator import FleetView
 
@@ -31,6 +39,7 @@ __all__ = [
     "state_features",
     "fleet_state_features",
     "RewardWeights",
+    "RepartitionEnv",
 ]
 
 # The paper uses m=3, chosen "based on an analysis of typical GPU loads in
@@ -128,3 +137,148 @@ class RewardWeights:
         system, expressed in the same normalized-tardiness units."""
         y = self.switch_penalty_min * max(jobs_in_system, 1) / self.tardiness_norm
         return (y / (self.a + 1.0)) / self.scale
+
+
+class RepartitionEnv:
+    """Incremental repartitioning environment (Gym-style, §IV-D).
+
+    One episode is one simulated day (or any job stream): ``reset`` builds a
+    fresh simulator + interactive :class:`SimulationEngine` and advances to
+    the first decision point; ``step(action)`` applies the configuration
+    choice, resumes the event loop to the next decision point (or the end of
+    the stream), and returns the per-decision reward — the ET-scalarized
+    energy/tardiness accumulated over exactly that interval, minus the
+    §IV-D-3 switch penalty when the action repartitioned.
+
+    ``step`` returns ``(obs, reward, terminated, truncated, info)``.
+    ``truncate_after_min`` / ``max_decisions`` bound an episode early
+    (curriculum / wall-clock control): the episode ends with
+    ``truncated=True`` and the remaining simulated day is abandoned.
+
+    Actions are config indices ``0..11`` mapping to configurations
+    ``1..12`` (the paper's A100 Fig. 1 table); choosing the current
+    configuration is a no-op decision.
+    """
+
+    def __init__(
+        self,
+        scheduler_name: str = "EDF-SS",
+        spec=None,
+        scenario: Optional[str] = None,
+        scenario_kwargs: Optional[Dict] = None,
+        rewards: RewardWeights = RewardWeights(),
+        initial_config: int = 2,
+        mig_enabled: bool = True,
+        truncate_after_min: Optional[float] = None,
+        max_decisions: Optional[int] = None,
+        m: int = M_JOBS,
+    ) -> None:
+        from repro.core.workload import WorkloadSpec
+
+        self.spec = spec or WorkloadSpec()
+        self.scenario = scenario
+        self.scenario_kwargs = dict(scenario_kwargs or {})
+        self.scheduler_name = scheduler_name
+        self.rewards = rewards
+        self.initial_config = initial_config
+        self.mig_enabled = mig_enabled
+        self.truncate_after_min = truncate_after_min
+        self.max_decisions = max_decisions
+        self.m = m
+        self.sim: "MIGSimulator | None" = None
+        self.engine = None
+        self._prev_energy = 0.0
+        self._prev_tard = 0.0
+        self._decisions = 0
+        self._terminated = True
+
+    # ------------------------------------------------------------------
+    def reset(self, seed: int = 0, jobs=None) -> np.ndarray:
+        """Start a fresh episode; returns the first observation.
+
+        ``jobs`` overrides the generated stream (otherwise the scenario or
+        :class:`WorkloadSpec` is drawn with ``seed``).
+        """
+        from repro.core.engine import SimulationEngine
+        from repro.core.scenarios import generate_scenario
+        from repro.core.schedulers import make_scheduler
+        from repro.core.simulator import MIGSimulator
+        from repro.core.workload import generate_jobs
+
+        if jobs is None:
+            if self.scenario is not None:
+                jobs = generate_scenario(self.scenario, seed=seed, **self.scenario_kwargs)
+            else:
+                jobs = generate_jobs(self.spec, seed=seed)
+        self.sim = MIGSimulator(
+            make_scheduler(self.scheduler_name), mig_enabled=self.mig_enabled
+        )
+        self.engine = SimulationEngine(
+            self.sim,
+            policy=None,
+            interactive=True,
+            initial_config=self.initial_config,
+            jobs=jobs,
+        )
+        self._prev_energy = 0.0
+        self._prev_tard = 0.0
+        self._decisions = 0
+        self._terminated = not self.engine.run_to_decision()
+        return self._obs()
+
+    def step(self, action: int) -> Tuple[np.ndarray, float, bool, bool, Dict[str, Any]]:
+        """Apply ``action`` at the pending decision point and advance."""
+        if self.engine is None or self._terminated:
+            raise RuntimeError("episode over (or never started); call reset()")
+        sim = self.sim
+        config_id = int(action) + 1  # actions 0..11 -> configs 1..12
+        switched = config_id != sim.partition.config_id
+        penalty = (
+            self.rewards.switch_penalty(len(sim.active)) if switched else 0.0
+        )
+        self.engine.provide_decision(config_id if switched else None)
+        self._decisions += 1
+
+        running = self.engine.run_to_decision()
+        terminated = not running
+        truncated = False
+        if running:
+            if (
+                self.truncate_after_min is not None
+                and sim.t >= self.truncate_after_min
+            ):
+                truncated = True
+            if self.max_decisions is not None and self._decisions >= self.max_decisions:
+                truncated = True
+        self._terminated = terminated or truncated
+
+        d_e = sim.energy_wh - self._prev_energy
+        d_t = sim.tardiness_integral - self._prev_tard
+        self._prev_energy = sim.energy_wh
+        self._prev_tard = sim.tardiness_integral
+        reward = self.rewards.interval_reward(d_e, d_t) - penalty
+
+        info = {
+            "t": sim.t,
+            "switched": switched,
+            "config_id": sim.partition.config_id,
+            "decisions": self._decisions,
+            # same O(1) definition as SimSnapshot/EngineEvent (not the
+            # EDF-sorted queue_snapshot(): this runs in the training hot loop)
+            "queue_depth": max(len(sim.active) - len(sim.assignment), 0),
+        }
+        return self._obs(), reward, terminated, truncated, info
+
+    @property
+    def done(self) -> bool:
+        """True when no episode is in progress (terminated or truncated)."""
+        return self._terminated
+
+    def result(self) -> "SimResult":
+        """The finished episode's :class:`SimResult` (terminal episodes only)."""
+        if self.engine is None:
+            raise RuntimeError("no episode has run")
+        return self.engine.result()
+
+    def _obs(self) -> np.ndarray:
+        return state_features(self.sim.t, self.sim, self.m)

@@ -2,6 +2,10 @@
 
 Each episode is one simulated 24-hour day of the diurnal workload (Fig. 5)
 scheduled by (restricted) EDF-SS inside the currently selected configuration.
+Training drives the incremental :class:`~repro.core.rl.env.RepartitionEnv`
+(``reset()`` / ``step(action)`` over the steppable simulation engine) — the
+old pattern of threading a live agent through a full simulator run as a
+policy is gone, and with it the full-run ``decision_hook`` plumbing.
 """
 
 from __future__ import annotations
@@ -10,16 +14,11 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
 from repro.core.metrics import SimResult
-from repro.core.rl.agent import DQNAgent, greedy_policy
+from repro.core.rl.agent import NStepAccumulator
 from repro.core.rl.dqn import DQNConfig, DQNLearner
-from repro.core.rl.env import FEATURE_DIM, RewardWeights
-from repro.core.scenarios import generate_scenario
-from repro.core.schedulers import Scheduler, make_scheduler
-from repro.core.simulator import MIGSimulator, RepartitionPolicy
-from repro.core.workload import WorkloadSpec, generate_jobs
+from repro.core.rl.env import FEATURE_DIM, RepartitionEnv, RewardWeights
+from repro.core.workload import WorkloadSpec
 
 __all__ = ["TrainStats", "train_dqn", "evaluate_policy", "evaluate_policy_fleet"]
 
@@ -59,8 +58,14 @@ def train_dqn(
     spec = spec or WorkloadSpec()
     cfg = dqn_config or DQNConfig(state_dim=FEATURE_DIM, seed=seed)
     learner = DQNLearner(cfg)
-    agent = DQNAgent(learner, rewards=rewards, train=True, guide=guide)
-    sim = MIGSimulator(make_scheduler(scheduler_name))
+    env = RepartitionEnv(
+        scheduler_name=scheduler_name,
+        spec=spec,
+        scenario=scenario,
+        scenario_kwargs=scenario_kwargs,
+        rewards=rewards,
+    )
+    nstep = NStepAccumulator(cfg.n_step, cfg.gamma)
 
     t0 = time.time()
     ep_rewards: List[float] = []
@@ -68,27 +73,45 @@ def train_dqn(
     all_losses: List[float] = []
     for ep in range(num_episodes):
         ep_seed = seed * 100_003 + ep
-        if scenario is not None:
-            jobs = generate_scenario(scenario, seed=ep_seed, **(scenario_kwargs or {}))
-        else:
-            jobs = generate_jobs(spec, seed=ep_seed)
-        agent.begin_episode(learner.epsilon(ep))
-        agent.use_guide = guide is not None and ep < guide_episodes
-        if agent.use_guide and hasattr(guide, "reset"):
+        epsilon = learner.epsilon(ep)
+        use_guide = guide is not None and ep < guide_episodes
+        if use_guide and hasattr(guide, "reset"):
             # stateful demonstration policies (e.g. the predictive
             # ForecastPolicy: EWMA bias, dwell clocks) start each episode
             # clean, exactly as a fresh simulated day would see them
             guide.reset()
-        result = sim.run(jobs, policy=agent)
-        agent.end_episode(sim)
-        ep_rewards.append(agent.episode_reward)
+        obs = env.reset(seed=ep_seed)
+        nstep.clear()
+        ep_reward = 0.0
+        ep_losses: List[float] = []
+        over = env.done  # degenerate empty episode (no decision points)
+        while not over:
+            if use_guide:
+                choice = guide.decide(env.sim.t, env.sim)
+                action = (
+                    (choice - 1)
+                    if choice is not None
+                    else (env.sim.partition.config_id - 1)
+                )
+            else:
+                action = learner.act(obs, epsilon)
+            next_obs, r, terminated, truncated, _ = env.step(action)
+            ep_reward += r
+            nstep.push(learner, obs, action, r, next_obs, terminated or truncated)
+            loss = learner.maybe_train(1)
+            if loss == loss:  # not NaN (returned before the buffer warms up)
+                ep_losses.append(loss)
+            obs = next_obs
+            over = terminated or truncated
+        result = env.result()
+        ep_rewards.append(ep_reward)
         proxy = rewards.a * result.energy_wh + result.avg_tardiness
         ep_proxy.append(proxy)
-        all_losses.extend(agent.losses)
+        all_losses.extend(ep_losses)
         if verbose and (ep + 1) % 10 == 0:  # pragma: no cover
             print(
-                f"episode {ep + 1}/{num_episodes} eps={agent.epsilon:.2f} "
-                f"reward={agent.episode_reward:.2f} proxy={proxy:.2f} "
+                f"episode {ep + 1}/{num_episodes} eps={epsilon:.2f} "
+                f"reward={ep_reward:.2f} proxy={proxy:.2f} "
                 f"repart={result.repartitions}"
             )
     stats = TrainStats(

@@ -12,18 +12,21 @@ Implements the paper's simulation setting (§IV, §V-A):
 * preemptions are counted by diffing consecutive assignments (a running job
   that is paused or moved counts once).
 
+The event loop itself lives in :mod:`repro.core.engine`
+(:class:`SimulationEngine`): :meth:`MIGSimulator.run` is a thin one-shot
+wrapper over it, and the step-wise path is bit-identical by construction.
+This module keeps the numeric state — time advance, energy/tardiness
+integration, assignments, preemption accounting — and the policy zoo.
+
 The simulator is deterministic given the job list and policy.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import enum
-import heapq
-import itertools
 import math
-from typing import Callable, Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
+from repro.core.engine import SimSnapshot, SimulationEngine, snapshot_of
 from repro.core.jobs import Job
 from repro.core.metrics import SimResult
 from repro.core.power import A100_250W, PowerModel
@@ -45,7 +48,11 @@ __all__ = [
 # numbers a run produces (event ordering, power model wiring, penalty, ...);
 # the sweep cache (repro.sweep) keys cells on it so stale results never
 # survive a semantics change.
-SIM_VERSION = "mig-sim-2"
+#
+# mig-sim-3: fleet dispatch is online (dispatchers observe real per-device
+# engine state instead of a fluid backlog estimate) and a spurious
+# completion event recomputes the finish time instead of re-pushing t+1e-6.
+SIM_VERSION = "mig-sim-3"
 
 # §IV-D-3: destroying/recreating MIG slices takes ~4 seconds.
 REPARTITION_PENALTY_MIN = 4.0 / 60.0
@@ -131,7 +138,7 @@ class CallbackPolicy:
 
     def __init__(
         self,
-        fn: Callable[[float, "MIGSimulator"], Optional[int]],
+        fn,
         initial_config: int = 2,
     ) -> None:
         self._fn = fn
@@ -142,14 +149,6 @@ class CallbackPolicy:
 
     def next_timer(self, t: float) -> Optional[float]:
         return None
-
-
-class _Ev(enum.IntEnum):
-    ARRIVAL = 0
-    COMPLETION = 1
-    CRITICAL = 2
-    REPART_DONE = 3
-    TIMER = 4
 
 
 class MIGSimulator:
@@ -176,8 +175,16 @@ class MIGSimulator:
         )
 
         # runtime state (reset per run)
+        self.reset(min(self.configs))
+
+    def reset(self, config_id: int) -> None:
+        """Clear all run state and install the initial configuration.
+
+        :class:`~repro.core.engine.SimulationEngine` calls this when it is
+        constructed; a simulator instance is reusable across runs.
+        """
         self.t = 0.0
-        self.partition: Partition = self._config(min(self.configs))
+        self.partition: Partition = self._config(config_id)
         self.active: Dict[int, Job] = {}
         self.assignment: Assignment = {}
         self.completed: List[Job] = []
@@ -187,7 +194,7 @@ class MIGSimulator:
         self.repartitions = 0
         self.busy_slot_minutes = 0.0
         self.util_histogram: Dict[int, float] = {}
-        self.config_trace: List[Tuple[float, int]] = []
+        self.config_trace: List[Tuple[float, int]] = [(0.0, config_id)]
         self._repartitioning_until: Optional[float] = None
         self._pending_config: Optional[int] = None
 
@@ -216,6 +223,15 @@ class MIGSimulator:
         ]
         waiting.sort(key=lambda j: (j.deadline, j.arrival, j.job_id))
         return waiting
+
+    def snapshot(self) -> SimSnapshot:
+        """Structured read-only view of the current state.
+
+        This is what repartitioning policies and fleet dispatchers observe
+        (see :class:`repro.core.engine.SimSnapshot` for the field contract);
+        everything in it is observable by a real MIG controller.
+        """
+        return snapshot_of(self)
 
     # ------------------------------------------------------------------
     def _advance(self, new_t: float) -> None:
@@ -299,172 +315,15 @@ class MIGSimulator:
         jobs: Sequence[Job],
         policy: Optional[RepartitionPolicy] = None,
         initial_config: Optional[int] = None,
-        decision_hook: Optional[Callable[[float, "MIGSimulator"], None]] = None,
     ) -> SimResult:
         """Simulate to completion of all jobs; returns a :class:`SimResult`.
 
-        ``decision_hook`` fires at every decision point *before* the policy —
-        used by the RL agent to harvest transitions.
+        One-shot wrapper over :class:`repro.core.engine.SimulationEngine`;
+        build the engine directly for step-wise execution, online arrival
+        injection, or a live trace sink.
         """
-        policy = policy or StaticPolicy(config_id=initial_config or 3)
-        cfg0 = initial_config if initial_config is not None else policy.initial_config
-
-        # reset state
-        self.t = 0.0
-        self.partition = self._config(cfg0)
-        self.active = {}
-        self.assignment = {}
-        self.completed = []
-        self.energy_wh = 0.0
-        self.tardiness_integral = 0.0
-        self.preemptions = 0
-        self.repartitions = 0
-        self.busy_slot_minutes = 0.0
-        self.util_histogram = {}
-        self.config_trace = [(0.0, cfg0)]
-        self._repartitioning_until = None
-        self._pending_config = None
-
-        seq = itertools.count()
-        heap: List[Tuple[float, int, int, int, int]] = []  # (t, kind, seq, payload, version)
-        version = 0
-        timer_scheduled: set = set()
-
-        def push(t: float, kind: _Ev, payload: int = -1, ver: int = -1) -> None:
-            heapq.heappush(heap, (t, int(kind), next(seq), payload, ver))
-
-        for job in jobs:
-            push(job.arrival, _Ev.ARRIVAL, job.job_id)
-        jobs_by_id = {j.job_id: j for j in jobs}
-        arrivals_left = len(jobs_by_id)
-
-        def push_followups() -> None:
-            nonlocal version
-            version += 1
-            if self._repartitioning_until is not None:
-                return
-            # earliest completion among running jobs
-            best_t, best_id = math.inf, -1
-            for jid, sl in self.assignment.items():
-                job = self.active[jid]
-                ft = job.finish_time_on(
-                    self.t, self.partition.slices[sl].slots, self.mig_enabled
-                )
-                if ft < best_t:
-                    best_t, best_id = ft, jid
-            if best_id >= 0 and math.isfinite(best_t):
-                push(max(best_t, self.t), _Ev.COMPLETION, best_id, version)
-            # critical-laxity timer (LLF/LALF)
-            crit = self.scheduler.next_critical_time(
-                self.t, self.partition,
-                list(self.active.values()), self.assignment, self.mig_enabled,
-            )
-            if crit is not None:
-                push(crit, _Ev.CRITICAL, -1, version)
-
-        def maybe_decide() -> None:
-            if self._repartitioning_until is not None:
-                return
-            if decision_hook is not None:
-                decision_hook(self.t, self)
-            choice = policy.decide(self.t, self)
-            if choice is not None and choice != self.partition.config_id:
-                if choice not in self.configs:
-                    raise KeyError(
-                        f"policy chose config {choice}, not in this device's "
-                        f"table (valid ids {sorted(self.configs)})"
-                    )
-                self._start_repartition(choice)
-                push(self._repartitioning_until, _Ev.REPART_DONE)
-
-        def schedule_policy_timer() -> None:
-            # no more timers once all arrivals are in and the queue is drained
-            # (a perpetual Day/Night boundary chain would never terminate)
-            if arrivals_left == 0 and not self.active:
-                return
-            nt = policy.next_timer(self.t)
-            if nt is not None and nt not in timer_scheduled:
-                timer_scheduled.add(nt)
-                push(nt, _Ev.TIMER)
-
-        schedule_policy_timer()
-        push_followups()
-
-        events = 0
-        while heap:
-            events += 1
-            if events > self.max_events:
-                raise RuntimeError("event budget exceeded — likely a scheduling livelock")
-            ev_t, kind, _, payload, ver = heapq.heappop(heap)
-            kind = _Ev(kind)
-            if kind in (_Ev.COMPLETION, _Ev.CRITICAL) and ver != version:
-                continue  # stale
-            self._advance(ev_t)
-
-            if kind == _Ev.ARRIVAL:
-                job = jobs_by_id[payload]
-                self.active[job.job_id] = job
-                arrivals_left -= 1
-                maybe_decide()
-                self._reschedule()
-                self._complete_finished()
-                push_followups()
-            elif kind == _Ev.COMPLETION:
-                finished = self._complete_finished()
-                if not finished:
-                    # numerical race: re-push slightly later
-                    push(self.t + 1e-6, _Ev.COMPLETION, payload, version)
-                    continue
-                maybe_decide()
-                self._reschedule()
-                self._complete_finished()
-                push_followups()
-            elif kind == _Ev.CRITICAL:
-                # mark newly-critical waiting jobs (bounded per job)
-                for job in self.queue_snapshot():
-                    lax = self.scheduler.job_laxity(
-                        self.t, self.partition, job, self.mig_enabled
-                    )
-                    if (
-                        lax <= self.scheduler.critical_laxity_threshold + 1e-6
-                        and job.critical_events < self.scheduler.max_critical_preemptions
-                    ):
-                        job.critical_events += 1
-                self._reschedule()
-                self._complete_finished()
-                push_followups()
-            elif kind == _Ev.REPART_DONE:
-                self._finish_repartition()
-                self._reschedule()
-                self._complete_finished()
-                push_followups()
-            elif kind == _Ev.TIMER:
-                maybe_decide()
-                self._reschedule()
-                self._complete_finished()
-                schedule_policy_timer()
-                push_followups()
-
-        # all arrivals processed and queue drained?
-        if self.active:
-            raise RuntimeError(
-                f"simulation ended with {len(self.active)} unfinished jobs"
-            )
-
-        m = max(len(self.completed), 1)
-        total_tard = sum(j.tardiness() for j in self.completed)
-        return SimResult(
-            energy_wh=self.energy_wh,
-            avg_tardiness=total_tard / m,
-            num_jobs=len(self.completed),
-            total_tardiness=total_tard,
-            preemptions=self.preemptions,
-            repartitions=self.repartitions,
-            max_tardiness=max((j.tardiness() for j in self.completed), default=0.0),
-            deadline_misses=sum(1 for j in self.completed if j.tardiness() > 1e-9),
-            busy_slot_minutes=self.busy_slot_minutes,
-            extra={
-                "makespan_min": self.t,
-                "tardiness_integral": self.tardiness_integral,
-            },
+        engine = SimulationEngine(
+            self, policy=policy, initial_config=initial_config, jobs=jobs
         )
+        engine.drain()
+        return engine.result()

@@ -18,6 +18,8 @@ from repro.fleet.dispatch import (
     DISPATCHERS,
     DeviceLoadState,
     Dispatcher,
+    EngineDeviceState,
+    StateAwareDispatcher,
     dispatch_jobs,
     make_dispatcher,
 )
@@ -39,6 +41,8 @@ __all__ = [
     "DISPATCHERS",
     "DeviceLoadState",
     "Dispatcher",
+    "EngineDeviceState",
+    "StateAwareDispatcher",
     "dispatch_jobs",
     "make_dispatcher",
     "FleetDeviceSpec",

@@ -1,35 +1,47 @@
 """Fleet dispatchers: route arriving jobs to MIG-capable devices.
 
-The fleet simulation is two-phase (see :mod:`repro.fleet.simulator`): the
-dispatcher walks the merged arrival stream once, deciding a device for each
-job from a cheap deterministic *estimate* of per-device load, then each
-device simulates its subset exactly.  The estimate is a fluid backlog in
-1g-slice-minutes that drains at the device's peak slot count — the same
-first-order model the MIG cluster schedulers use for placement scoring
-(Tan et al.; Zambianco et al.), and deliberately independent of the
-per-device scheduler so dispatch order is reproducible.
+The default fleet execution is *online* (see :mod:`repro.fleet.simulator`):
+per-device simulation engines are co-advanced to each arrival on a merged
+event clock, and the dispatcher observes **real** device state — actual
+outstanding work, queue depth, the current partition, and any in-flight
+repartition — through :class:`EngineDeviceState` views over live engine
+snapshots.  The legacy *fluid* mode (``dispatch_info="fluid"``) instead
+walks the arrival stream once against a cheap backlog estimate that drains
+at the device's peak slot count — the first-order model the MIG cluster
+schedulers use for placement scoring (Tan et al.; Zambianco et al.).  The
+``dispatchers`` sweep grid measures the online-vs-fluid gap.
 
-Dispatchers:
+Dispatchers (all deterministic; a dispatcher sees whichever state view the
+execution mode provides):
 
 * ``round-robin``   — arrival index modulo fleet size (the baseline);
 * ``least-loaded``  — smallest normalized backlog (backlog / peak slots);
 * ``energy-greedy`` — smallest *marginal power* for one more busy slot at
   the device's estimated utilization: exploits the concave Fig. 3 curve by
   packing onto already-hot devices and preferring low-power devices when
-  everything is idle.
+  everything is idle;
+* ``state-aware``   — online-only: minimizes an expected-start-delay proxy
+  built from real state (normalized backlog + remaining repartition stall
+  + a congestion step when no slice is free), breaking ties toward the
+  cheaper marginal watt.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Protocol, Sequence, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Protocol, Sequence, Tuple
 
 from repro.core.jobs import Job
 from repro.fleet.devices import DeviceProfile
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.engine import SimulationEngine
+
 __all__ = [
     "DeviceLoadState",
+    "EngineDeviceState",
     "Dispatcher",
+    "StateAwareDispatcher",
     "DISPATCHERS",
     "make_dispatcher",
     "dispatch_jobs",
@@ -68,6 +80,100 @@ class DeviceLoadState:
         """Backlog smeared over the lookahead window, capped at the device."""
         slots = self.backlog_1g_min / _ENERGY_LOOKAHEAD_MIN
         return min(slots, float(self.profile.total_slots))
+
+
+class EngineDeviceState:
+    """Live, real-state view of one device for online dispatch.
+
+    Exposes the same surface the fluid :class:`DeviceLoadState` offers
+    (``backlog_1g_min`` / ``normalized_load`` / ``est_busy_slots``) so every
+    dispatcher runs unmodified in both modes — but here the numbers are read
+    off the device's live engine snapshot: the backlog is the *actual*
+    outstanding work of jobs in the system, and the online-only signals
+    (queue depth, in-flight repartition, free slices on the current
+    partition) exist only on this view.
+
+    A device's simulator clock sits at its *last processed event*, which
+    may lag the arrival being routed by a different amount per device.
+    :meth:`observe_at` sets the observation instant: between events the
+    backlog drains linearly at the snapshot's ``service_rate_1g_per_min``
+    (and a repartition stall shrinks at unit rate), so the view projects
+    both to exactly ``t`` — every device is compared at the same simulated
+    time without touching the simulation itself.  Job membership (queue
+    depth, free slices) cannot change between events, so those need no
+    projection.
+    """
+
+    def __init__(self, index: int, profile: DeviceProfile, engine: "SimulationEngine") -> None:
+        self.index = index
+        self.profile = profile
+        self.engine = engine
+        self.dispatched = 0
+        self._t_obs: "float | None" = None
+        self._cache_stamp = -1
+        self._cache_snap = None
+
+    def observe_at(self, t: float) -> None:
+        """Project subsequent reads to the instant ``t`` (>= the device clock)."""
+        self._t_obs = t
+
+    @property
+    def _snap(self):
+        # one snapshot per engine advance: the sim state only changes when
+        # events process, so a pick() reading several properties — and the
+        # trace record right after — reuse a single O(active) scan
+        stamp = self.engine.events_processed
+        if self._cache_snap is None or stamp != self._cache_stamp:
+            self._cache_snap = self.engine.sim.snapshot()
+            self._cache_stamp = stamp
+        return self._cache_snap
+
+    @property
+    def _gap_min(self) -> float:
+        """Minutes between the device clock and the observation instant."""
+        if self._t_obs is None:
+            return 0.0
+        return max(self._t_obs - self._snap.t, 0.0)
+
+    @property
+    def backlog_1g_min(self) -> float:
+        """Outstanding work (1g-minutes), projected to the observed instant."""
+        snap = self._snap
+        return max(
+            snap.backlog_1g_min - snap.service_rate_1g_per_min * self._gap_min,
+            0.0,
+        )
+
+    @property
+    def normalized_load(self) -> float:
+        """Backlog in device-minutes (backlog over peak drain rate)."""
+        return self.backlog_1g_min / self.profile.total_slots
+
+    def est_busy_slots(self) -> float:
+        """Backlog smeared over the lookahead window, capped at the device."""
+        return min(
+            self.backlog_1g_min / _ENERGY_LOOKAHEAD_MIN,
+            float(self.profile.total_slots),
+        )
+
+    # -- online-only signals (what the fluid estimate cannot see) --------
+    @property
+    def queue_depth(self) -> int:
+        """Jobs waiting (in system, not running) at the observed instant."""
+        return self._snap.queue_depth
+
+    @property
+    def repartition_remaining_min(self) -> float:
+        """Minutes of repartition stall left at the observed instant (0 if none)."""
+        return max(self._snap.repartition_remaining_min - self._gap_min, 0.0)
+
+    @property
+    def free_slices(self) -> int:
+        """Unoccupied slices of the *current* partition (0 mid-repartition)."""
+        snap = self._snap
+        if snap.repartitioning:
+            return 0
+        return max(snap.num_slices - snap.running, 0)
 
 
 class Dispatcher(Protocol):
@@ -139,10 +245,56 @@ class EnergyGreedyDispatcher:
         return min(open_devices, key=lambda i: (marginal_watts(i), i))
 
 
+class StateAwareDispatcher:
+    """Online-only routing on real device state (queue, partition, stalls).
+
+    Scores each device by an expected-start-delay proxy the fluid estimate
+    cannot compute:
+
+    ``delay = normalized_load + repartition_remaining + congestion``
+
+    where ``normalized_load`` is the device's *actual* outstanding work over
+    its peak drain rate, ``repartition_remaining`` the minutes the GPU stays
+    blocked by an in-flight repartition (arrivals routed there stall), and
+    ``congestion`` a one-device-minute step when the current partition has
+    no free slice (the job must wait for a completion or preemption rather
+    than starting immediately).  Ties break toward the cheaper marginal
+    watt at the device's current busy slots, then the lower index — so on
+    an idle fleet it packs like ``energy-greedy``, but never onto a device
+    that is mid-repartition or visibly congested.
+
+    Requires online dispatch (``requires_online``): the fluid two-phase
+    mode has no partition or repartition state to read.
+    """
+
+    name = "state-aware"
+    requires_online = True
+
+    #: added delay (device-minutes) when no slice of the current partition
+    #: is free — the job cannot start before a completion frees one
+    CONGESTION_STEP_MIN = 1.0
+
+    def pick(self, job: Job, t: float, states: Sequence["EngineDeviceState"]) -> int:
+        """Device minimizing (expected start delay, marginal watts, index)."""
+        def key(i: int):
+            st = states[i]
+            delay = st.normalized_load + st.repartition_remaining_min
+            if st.free_slices == 0:
+                delay += self.CONGESTION_STEP_MIN
+            power = st.profile.power
+            busy = st.est_busy_slots()
+            total = float(st.profile.total_slots)
+            marginal = power.power_watts(min(busy + 1.0, total)) - power.power_watts(busy)
+            return (delay, marginal, i)
+
+        return min(range(len(states)), key=key)
+
+
 DISPATCHERS: Dict[str, Callable[[], Dispatcher]] = {
     "round-robin": RoundRobinDispatcher,
     "least-loaded": LeastLoadedDispatcher,
     "energy-greedy": EnergyGreedyDispatcher,
+    "state-aware": StateAwareDispatcher,
 }
 
 
@@ -170,7 +322,14 @@ def dispatch_jobs(
 
     Jobs must be sorted by arrival (workload generators guarantee it); the
     fluid states are drained to each arrival before the dispatcher looks.
+    Dispatchers that read real engine state (``requires_online``) cannot
+    run against the fluid estimate and are rejected here.
     """
+    if getattr(dispatcher, "requires_online", False):
+        raise ValueError(
+            f"dispatcher {dispatcher.name!r} reads real device state and "
+            "cannot run in fluid mode"
+        )
     states = [DeviceLoadState(index=i, profile=p) for i, p in enumerate(profiles)]
     assignments: List[int] = []
     trace: DispatchTrace = []

@@ -1,21 +1,27 @@
 """Fleet-level MIG simulation: N heterogeneous GPUs behind one dispatcher.
 
-Execution model (two phases, both deterministic):
+Execution model — **online** (the default, ``dispatch_info="online"``):
+every device gets its own steppable :class:`~repro.core.engine.SimulationEngine`
+and the fleet co-advances them on a merged event clock.  At each arrival
+every engine is run up to (but not through) the arrival instant, the
+pluggable dispatcher (:mod:`repro.fleet.dispatch`) observes **real** device
+state — actual outstanding work, queue depth, the current partition, any
+in-flight repartition — through live engine snapshots, and the job is
+injected into the chosen device's engine.  When the stream ends the engines
+drain independently.
 
-1. *Dispatch* — the merged arrival stream is walked once; the pluggable
-   dispatcher (:mod:`repro.fleet.dispatch`) routes each job to a device from
-   a fluid per-device backlog estimate.
-2. *Simulate* — each device runs its job subset through its own
-   :class:`~repro.core.simulator.MIGSimulator` (own scheduler, repartition
-   policy, power model, and partition table), exactly as the single-GPU
-   paper path does.
+The legacy **fluid** mode (``dispatch_info="fluid"``) is the two-phase
+pre-split this replaced: the arrival stream is walked once against a fluid
+per-device backlog estimate, then each device simulates its subset from
+scratch.  It is kept as an explicit mode so the online-vs-fluid gap stays a
+measurable number (the ``dispatchers`` sweep grid / EXPERIMENTS.md).
 
 Per-device :class:`~repro.core.metrics.SimResult`\\ s are then aggregated
 into fleet totals.  The load-bearing invariant — pinned by tests and the
 ``fleet_scaling`` CI baseline — is that a **1-device fleet is bit-identical
-to the single-MIG path**: one device receives the job list unchanged, runs
-the identical simulator, and ``aggregate_sim_results`` of one result *is*
-that result.
+to the single-MIG path** in *both* modes: one device receives the job list
+unchanged (event-for-event, whichever mode delivers it), and
+``aggregate_sim_results`` of one result *is* that result.
 """
 
 from __future__ import annotations
@@ -24,13 +30,19 @@ import bisect
 import dataclasses
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.core.engine import SimulationEngine
 from repro.core.jobs import Job
 from repro.core.metrics import SimResult
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import MIGSimulator, RepartitionPolicy
 from repro.core.slices import MIG_CONFIGS, Partition
 from repro.fleet.devices import DeviceProfile, device_profile
-from repro.fleet.dispatch import DispatchTrace, dispatch_jobs, make_dispatcher
+from repro.fleet.dispatch import (
+    DispatchTrace,
+    EngineDeviceState,
+    dispatch_jobs,
+    make_dispatcher,
+)
 
 __all__ = [
     "DeviceAdaptedPolicy",
@@ -41,6 +53,9 @@ __all__ = [
     "FleetSimulator",
     "aggregate_sim_results",
 ]
+
+#: valid ``FleetSpec.dispatch_info`` values
+DISPATCH_INFO_MODES = ("online", "fluid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,20 +69,27 @@ class FleetDeviceSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """A fleet: device list, dispatcher, and default in-device scheduler."""
+    """A fleet: device list, dispatcher, in-device scheduler, dispatch mode.
+
+    ``dispatch_info`` selects what the dispatcher observes: ``"online"``
+    (default) co-advances per-device engines and exposes real state;
+    ``"fluid"`` is the legacy backlog-estimate pre-split.
+    """
 
     devices: Tuple[FleetDeviceSpec, ...]
     dispatcher: str = "round-robin"
     scheduler: str = "EDF-SS"
+    dispatch_info: str = "online"
 
     @staticmethod
     def of(profiles: Sequence[str], dispatcher: str = "round-robin",
-           scheduler: str = "EDF-SS") -> "FleetSpec":
+           scheduler: str = "EDF-SS", dispatch_info: str = "online") -> "FleetSpec":
         """Shorthand: a fleet from profile names with no per-device overrides."""
         return FleetSpec(
             devices=tuple(FleetDeviceSpec(profile=p) for p in profiles),
             dispatcher=dispatcher,
             scheduler=scheduler,
+            dispatch_info=dispatch_info,
         )
 
 
@@ -87,27 +109,48 @@ class FleetResult:
 
 
 class FleetView:
-    """Read-only dispatch-time load lookup for fleet-aware observations.
+    """Read-only fleet-load lookup for fleet-aware observations.
 
-    Wraps the dispatch trace: ``load_share(i, t)`` is device ``i``'s share of
-    the fleet's estimated backlog at the last routing decision before ``t``,
-    ``total_load_norm(t)`` the fleet backlog normalized to ``norm_min``
-    device-minutes and clipped to [0, 1].
+    Wraps the dispatch-time trace (one per-device backlog record per routed
+    job — *real* backlogs in online mode, fluid estimates in fluid mode):
+    ``load_share(i, t)`` is device ``i``'s share of the fleet backlog at the
+    last routing decision before ``t``, ``total_load_norm(t)`` the fleet
+    backlog normalized to ``norm_min`` device-minutes and clipped to [0, 1].
+
+    In online mode the view also holds the live engines: *while the
+    arrival stream is open* (the engines are being co-advanced together), a
+    lookup at or past the newest trace record reads the engines' current
+    snapshots instead of the last record — mid-run observers (per-device RL
+    features, streaming telemetry) see the device state as it is now, not
+    as it was at the previous arrival.  Once the stream closes the engines
+    drain independently (their clocks diverge), so lookups fall back to the
+    recorded trace — the same post-run behavior as fluid mode.
     """
 
     def __init__(self, trace: DispatchTrace, profiles: Sequence[DeviceProfile],
-                 norm_min: float = 120.0) -> None:
-        self._times = [t for t, _ in trace]
-        self._backlogs = [b for _, b in trace]
+                 norm_min: float = 120.0,
+                 engines: Optional[Sequence[SimulationEngine]] = None) -> None:
+        # the trace list is shared with the running FleetSimulator in online
+        # mode (append-only); index lazily so mid-run reads see fresh records
+        self._trace = trace
         self._profiles = list(profiles)
         self._norm_min = norm_min
+        self._engines = list(engines) if engines is not None else None
 
     def _at(self, t: float) -> Optional[Tuple[float, ...]]:
-        i = bisect.bisect_right(self._times, t) - 1
-        return self._backlogs[i] if i >= 0 else None
+        if (
+            self._engines is not None
+            and all(e.stream_open for e in self._engines)
+            and (not self._trace or t >= self._trace[-1][0])
+        ):
+            return tuple(
+                e.sim.snapshot().backlog_1g_min for e in self._engines
+            )
+        i = bisect.bisect_right(self._trace, t, key=lambda rec: rec[0]) - 1
+        return self._trace[i][1] if i >= 0 else None
 
     def load_share(self, device_index: int, t: float) -> float:
-        """Device's fraction of the estimated fleet backlog just before ``t``."""
+        """Device's fraction of the fleet backlog just before ``t``."""
         rec = self._at(t)
         if rec is None:
             return 0.0
@@ -204,38 +247,130 @@ class FleetSimulator:
 
     Policies are built per device via ``policy_factory`` (policy instances
     carry per-run state and must never be shared across devices).  The last
-    run's per-device simulators stay on ``self.sims`` for inspection — the
-    RL layer reads their queue state through
-    :func:`repro.core.rl.env.fleet_state_features`.
+    run's per-device simulators stay on ``self.sims`` (and, in online mode,
+    their engines on ``self.engines``) for inspection — the RL layer reads
+    their state through :func:`repro.core.rl.env.fleet_state_features`.
     """
 
     def __init__(self, spec: FleetSpec, mig_enabled: bool = True) -> None:
         if not spec.devices:
             raise ValueError("fleet needs at least one device")
+        if spec.dispatch_info not in DISPATCH_INFO_MODES:
+            raise ValueError(
+                f"unknown dispatch_info {spec.dispatch_info!r}; "
+                f"valid: {DISPATCH_INFO_MODES}"
+            )
         self.spec = spec
         self.mig_enabled = mig_enabled
         self.profiles = [device_profile(d.profile) for d in spec.devices]
         self.sims: List[MIGSimulator] = []
+        self.engines: List[SimulationEngine] = []
         self.view: Optional[FleetView] = None
+
+    def _device_policy(self, i: int, prof: DeviceProfile,
+                       policy_factory: PolicyFactory) -> RepartitionPolicy:
+        policy = policy_factory(i, prof)
+        if set(prof.configs) != set(MIG_CONFIGS):
+            # non-A100 table: translate the policy's A100-space choices
+            policy = DeviceAdaptedPolicy(policy, prof.configs)
+        return policy
 
     def run(
         self,
         jobs: Sequence[Job],
         policy_factory: PolicyFactory,
-        decision_hook: Optional[Callable[[int, float, MIGSimulator], None]] = None,
     ) -> FleetResult:
         """Dispatch ``jobs`` across the fleet and simulate every device.
 
-        ``decision_hook(device_index, t, sim)`` fires at each per-device
-        decision point (the fleet-aware RL observation path).  Returns the
-        aggregated :class:`FleetResult`; per-device simulators stay on
-        ``self.sims`` for inspection.
+        Returns the aggregated :class:`FleetResult`; per-device simulators
+        stay on ``self.sims`` for inspection.
+        """
+        if self.spec.dispatch_info == "fluid":
+            return self._run_fluid(jobs, policy_factory)
+        return self._run_online(jobs, policy_factory)
+
+    # ------------------------------------------------------------------
+    def _run_online(self, jobs: Sequence[Job], policy_factory: PolicyFactory) -> FleetResult:
+        """Co-advance one engine per device on the merged arrival clock."""
+        dispatcher = make_dispatcher(self.spec.dispatcher)
+        engines: List[SimulationEngine] = []
+        for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles)):
+            sim = MIGSimulator(
+                make_scheduler(dev.scheduler or self.spec.scheduler),
+                power_model=prof.power,
+                mig_enabled=self.mig_enabled,
+                config_table=prof.configs,
+            )
+            engines.append(
+                SimulationEngine(
+                    sim,
+                    policy=self._device_policy(i, prof, policy_factory),
+                    initial_config=dev.initial_config,
+                    stream_open=True,
+                )
+            )
+        self.engines = engines
+        self.sims = [e.sim for e in engines]
+        states = [
+            EngineDeviceState(i, prof, engine)
+            for i, (prof, engine) in enumerate(zip(self.profiles, engines))
+        ]
+        trace: DispatchTrace = []
+        self.view = FleetView(trace, self.profiles, engines=engines)
+
+        counts = [0] * len(engines)
+        prev_arrival = 0.0
+        for job in jobs:
+            if job.arrival < prev_arrival - 1e-9:
+                raise ValueError("fleet dispatch requires arrival-sorted jobs")
+            prev_arrival = job.arrival
+            # advance every device past all events before the arrival, then
+            # project each view to the arrival instant itself (a device's
+            # clock rests at its last event; between events state evolves
+            # linearly, so the projection is exact) — the dispatcher
+            # compares every device at the same simulated time t⁻
+            for engine, st in zip(engines, states):
+                engine.run_until(job.arrival, inclusive=False)
+                st.observe_at(job.arrival)
+            i = dispatcher.pick(job, job.arrival, states)
+            if not (0 <= i < len(states)):
+                raise IndexError(f"dispatcher {dispatcher.name} picked device {i}")
+            engines[i].inject(job)
+            counts[i] += 1
+            states[i].dispatched += 1
+            # record the post-decision backlog: the injected arrival is not
+            # processed yet, so the routed job's work is added explicitly —
+            # same "backlog after each routing decision" contract as the
+            # fluid trace
+            trace.append(
+                (
+                    job.arrival,
+                    tuple(
+                        st.backlog_1g_min + (job.work if k == i else 0.0)
+                        for k, st in enumerate(states)
+                    ),
+                )
+            )
+        for engine in engines:
+            engine.close_stream()
+        for engine in engines:
+            engine.drain()
+        per_device = [engine.result() for engine in engines]
+        return self._finish(per_device, counts, trace)
+
+    # ------------------------------------------------------------------
+    def _run_fluid(self, jobs: Sequence[Job], policy_factory: PolicyFactory) -> FleetResult:
+        """Legacy two-phase pre-split over the fluid backlog estimate.
+
+        ``dispatch_jobs`` rejects dispatchers that require real engine
+        state (``state-aware``) with a clear error.
         """
         dispatcher = make_dispatcher(self.spec.dispatcher)
         assignments, trace = dispatch_jobs(jobs, self.profiles, dispatcher)
         self.view = FleetView(trace, self.profiles)
 
         self.sims = []
+        self.engines = []
         per_device: List[SimResult] = []
         counts = [0] * len(self.profiles)
         for a in assignments:
@@ -248,21 +383,19 @@ class FleetSimulator:
                 mig_enabled=self.mig_enabled,
                 config_table=prof.configs,
             )
-            hook = None
-            if decision_hook is not None:
-                hook = (lambda idx: lambda t, s: decision_hook(idx, t, s))(i)
-            policy = policy_factory(i, prof)
-            if set(prof.configs) != set(MIG_CONFIGS):
-                # non-A100 table: translate the policy's A100-space choices
-                policy = DeviceAdaptedPolicy(policy, prof.configs)
             res = sim.run(
                 subset,
-                policy=policy,
+                policy=self._device_policy(i, prof, policy_factory),
                 initial_config=dev.initial_config,
-                decision_hook=hook,
             )
             self.sims.append(sim)
             per_device.append(res)
+        return self._finish(per_device, counts, trace)
+
+    # ------------------------------------------------------------------
+    def _finish(
+        self, per_device: List[SimResult], counts: List[int], trace: DispatchTrace
+    ) -> FleetResult:
         aggregate = aggregate_sim_results(per_device)
         if len(per_device) > 1:
             # Per-device energy only covers [0, device makespan] (the single-GPU

@@ -336,21 +336,19 @@ class ForecastPolicy:
             # time went backwards: the policy object is being reused for a
             # fresh episode (train_dqn guide runs) — start clean
             self.reset()
+        # everything the controller reads comes through the structured
+        # engine snapshot — the same observable surface a real MIG
+        # controller (and the fleet dispatchers) would have
+        snap = sim.snapshot()
         if hasattr(self.forecaster, "observe"):
-            self.forecaster.observe(t, len(sim.active) + len(sim.completed))
+            self.forecaster.observe(t, snap.active_jobs + snap.completed_jobs)
         if t - self._last_switch_t < self.min_dwell_min:
             return None
 
-        n_inf = w_inf = n_trn = w_trn = 0.0
-        for j in sim.active.values():
-            if j.done:
-                continue
-            if j.kind.value == "training":
-                n_trn += 1.0
-                w_trn += j.remaining
-            else:
-                n_inf += 1.0
-                w_inf += j.remaining
+        n_inf = float(snap.inference_jobs)
+        w_inf = snap.inference_backlog_1g_min
+        n_trn = float(snap.training_jobs)
+        w_trn = snap.training_backlog_1g_min
         # the eval throttle bounds lookahead cost (decision events arrive
         # with every job), but a queue jump since the last evaluation is a
         # burst the controller must see immediately
@@ -359,7 +357,7 @@ class ForecastPolicy:
             return None
         self._last_eval_t = t
         self._last_eval_n = n_inf + n_trn
-        current = sim.partition.config_id
+        current = snap.config_id
 
         best, costs = self._best_config(t, n_inf, w_inf, n_trn, w_trn, current)
         if best == current:

@@ -43,9 +43,10 @@ class QueueHeuristicPolicy:
     initial_config = 2
 
     def decide(self, t, sim):
-        q = len([j for j in sim.active.values() if not j.done])
+        snap = sim.snapshot()  # observable state only (engine snapshot API)
+        q = snap.jobs_in_system
         tgt = 1 if q <= 1 else 2 if q <= 2 else 3 if q <= 3 else 6 if q <= 5 else 9 if q <= 7 else 12
-        return tgt if tgt != sim.partition.config_id else None
+        return tgt if tgt != snap.config_id else None
 
     def next_timer(self, t):
         return None

@@ -246,13 +246,17 @@ def make_fleet_cell(
     policy: str = "static",
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
+    dispatch_info: str = "online",
 ) -> Cell:
     """A fleet cell: N devices (by profile name) behind a dispatcher.
 
     Builds on :func:`make_scenario_cell`; the extra ``fleet`` key routes
     :func:`run_cell` through :class:`repro.fleet.FleetSimulator`.  Every
     device runs ``scheduler`` and an independent instance of the cell's
-    repartitioning policy.
+    repartitioning policy.  ``dispatch_info`` selects what the dispatcher
+    observes — ``"online"`` (real co-advanced engine state, the default) or
+    ``"fluid"`` (the legacy backlog-estimate pre-split); the resolved value
+    always enters the cell so the content hash captures it.
     """
     cell = make_scenario_cell(
         experiment=experiment,
@@ -268,6 +272,7 @@ def make_fleet_cell(
     cell["fleet"] = {
         "devices": [{"profile": p} for p in profiles],
         "dispatcher": dispatcher,
+        "info": dispatch_info,
     }
     return cell
 
@@ -344,6 +349,7 @@ def _run_fleet_cell(
         ),
         dispatcher=f["dispatcher"],
         scheduler=cell["scheduler"],
+        dispatch_info=f.get("info", "online"),
     )
     if policy_factory is not None:
         def per_device_policy(i, prof):

@@ -401,7 +401,7 @@ _FLEETS: List[Tuple[str, List[str]]] = [
     ("4xA100", ["a100-250w"] * 4),
     ("2xA100+2xA30", ["a100-250w", "a100-250w", "a30-165w", "a30-165w"]),
 ]
-_FLEET_DISPATCHERS = ("round-robin", "least-loaded", "energy-greedy")
+_FLEET_DISPATCHERS = ("round-robin", "least-loaded", "energy-greedy", "state-aware")
 
 
 def _fleet_scaling_cells(scale: float) -> List[Cell]:
@@ -442,6 +442,86 @@ def _fleet_scaling_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -
                     **summarize_results(per[g]),
                 }
             )
+    return rows
+
+
+# ----------------------------------------------------------------------
+# dispatchers — online (real engine state) vs fluid (backlog estimate)
+# routing, per dispatcher, on multi-GPU fleets.  The measurable form of the
+# engine refactor's semantics change: dispatch decisions now see true
+# per-device queue/partition/repartition state at each arrival, and this
+# grid reports what that information is worth.  ``state-aware`` reads
+# signals the fluid estimate cannot produce, so it only has online rows.
+
+#: the multi-device rows of _FLEETS (a 1-device fleet routes identically in
+#: both modes, so it would only pad the grid)
+_DISPATCHER_FLEETS: List[Tuple[str, List[str]]] = [
+    (fname, profiles) for fname, profiles in _FLEETS
+    if fname in ("4xA100", "2xA100+2xA30")
+]
+
+
+def _dispatchers_cells(scale: float) -> List[Cell]:
+    # the validated mode list lives on the fleet layer; imported lazily so
+    # plain single-GPU sweeps keep their import-light workers
+    from repro.fleet.simulator import DISPATCH_INFO_MODES
+
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for fname, profiles in _DISPATCHER_FLEETS:
+        for disp in _FLEET_DISPATCHERS:
+            for info in DISPATCH_INFO_MODES:
+                if disp == "state-aware" and info == "fluid":
+                    continue  # needs real state by construction
+                for k in range(iters):
+                    cells.append(
+                        make_fleet_cell(
+                            experiment="dispatchers",
+                            group=f"{fname}:{disp}:{info}",
+                            profiles=profiles,
+                            dispatcher=disp,
+                            scheduler="EDF-SS",
+                            scenario="paper-diurnal",
+                            seed=87_000 + k,
+                            policy="static",
+                            policy_kwargs={"config_id": 3},
+                            dispatch_info=info,
+                        )
+                    )
+    return cells
+
+
+def _dispatchers_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for fname, _profiles in _DISPATCHER_FLEETS:
+        # shared ET scale factor per fleet across every dispatcher x mode
+        per = {
+            g: rs for g, rs in grouped.items() if g.startswith(f"{fname}:")
+        }
+        t, a = et_table(per)
+        for disp in _FLEET_DISPATCHERS:
+            et_online = t[f"{fname}:{disp}:online"]
+            et_fluid = t.get(f"{fname}:{disp}:fluid")
+            row: Dict[str, Any] = {
+                "fleet": fname,
+                "dispatcher": disp,
+                "et_a": a,
+                "ET_online": et_online,
+                "ET_fluid": et_fluid,
+                "online_gain_pct": (
+                    100.0 * (1.0 - et_online / et_fluid)
+                    if et_fluid is not None
+                    else None
+                ),
+                **{
+                    f"{k}_online": v
+                    for k, v in summarize_results(
+                        per[f"{fname}:{disp}:online"]
+                    ).items()
+                },
+            }
+            rows.append(row)
     return rows
 
 
@@ -602,6 +682,7 @@ GRIDS: Dict[str, GridDef] = {
         GridDef("table3_repartitioning", "Table III: repartitioning models", _table3_cells, _table3_aggregate),
         GridDef("fig11_preferences", "Fig. 11: preferred configs per 4h interval", _fig11_cells, _fig11_aggregate),
         GridDef("fleet_scaling", "Fleet: N heterogeneous GPUs x dispatcher", _fleet_scaling_cells, _fleet_scaling_aggregate),
+        GridDef("dispatchers", "Online (real-state) vs fluid (estimate) dispatch per dispatcher", _dispatchers_cells, _dispatchers_aggregate),
         GridDef("scenario_matrix", "Scenario library x the four schedulers", _scenario_matrix_cells, _scenario_matrix_aggregate),
         GridDef("repartition_policies", "Policy families x scenarios (incl. predictive controller)", _repartition_policies_cells, _repartition_policies_aggregate),
         GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),

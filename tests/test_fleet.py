@@ -114,7 +114,9 @@ def test_dispatch_requires_sorted_arrivals():
 
 
 def test_dispatcher_registry():
-    assert set(DISPATCHERS) == {"round-robin", "least-loaded", "energy-greedy"}
+    assert set(DISPATCHERS) == {
+        "round-robin", "least-loaded", "energy-greedy", "state-aware"
+    }
     with pytest.raises(KeyError):
         make_dispatcher("clairvoyant")
 
@@ -123,11 +125,12 @@ def test_dispatcher_registry():
 # fleet simulation
 
 
-def test_one_gpu_fleet_bit_identical_to_single_path():
+@pytest.mark.parametrize("info", ["online", "fluid"])
+def test_one_gpu_fleet_bit_identical_to_single_path(info):
     single = MIGSimulator(make_scheduler("EDF-SS")).run(
         generate_jobs(DAY, 42), policy=StaticPolicy(3)
     )
-    fleet = FleetSimulator(FleetSpec.of(["a100-250w"])).run(
+    fleet = FleetSimulator(FleetSpec.of(["a100-250w"], dispatch_info=info)).run(
         generate_jobs(DAY, 42), policy_factory=_static_factory(3)
     )
     agg = fleet.aggregate
@@ -137,6 +140,110 @@ def test_one_gpu_fleet_bit_identical_to_single_path():
         assert getattr(agg, field.name) == getattr(single, field.name), field.name
     assert agg.extra["makespan_min"] == single.extra["makespan_min"]
     assert agg.extra["tardiness_integral"] == single.extra["tardiness_integral"]
+
+
+def test_one_gpu_fleet_online_bit_identical_with_timer_policy():
+    """The online co-advance must replay the exact event sequence even for
+    policies that keep a timer chain alive (Day/Night boundaries)."""
+    from repro.core.simulator import DayNightPolicy
+
+    single = MIGSimulator(make_scheduler("EDF-SS")).run(
+        generate_jobs(DAY, 7), policy=DayNightPolicy()
+    )
+    fleet = FleetSimulator(FleetSpec.of(["a100-250w"])).run(
+        generate_jobs(DAY, 7), policy_factory=lambda i, p: DayNightPolicy()
+    )
+    assert fleet.aggregate == single
+    assert fleet.aggregate.repartitions >= 2
+
+
+def test_online_dispatch_observes_real_state():
+    """Online mode exposes per-device engines whose snapshots carry real
+    queue/partition state at dispatch time (the fluid path has neither)."""
+    fs = FleetSimulator(
+        FleetSpec.of(["a100-250w", "a30-165w"], dispatcher="least-loaded")
+    )
+    fs.run(generate_jobs(SHORT, 21), policy_factory=lambda i, p: StaticPolicy(p.default_config))
+    assert len(fs.engines) == 2
+    for engine in fs.engines:
+        assert engine.finished
+        snap = engine.snapshot()
+        assert snap.sim.backlog_1g_min == 0.0  # drained
+        assert snap.events_processed > 0
+
+
+def test_state_aware_requires_online_mode():
+    fs = FleetSimulator(
+        FleetSpec.of(["a100-250w"] * 2, dispatcher="state-aware", dispatch_info="fluid")
+    )
+    with pytest.raises(ValueError, match="cannot run in fluid mode"):
+        fs.run(generate_jobs(SHORT, 3), policy_factory=_static_factory(3))
+    with pytest.raises(ValueError, match="unknown dispatch_info"):
+        FleetSimulator(FleetSpec.of(["a100-250w"], dispatch_info="psychic"))
+
+
+def test_state_aware_avoids_repartitioning_device():
+    """A device mid-repartition (or visibly congested) must not win a
+    state-aware pick over an idle device."""
+    from repro.fleet import EngineDeviceState, StateAwareDispatcher
+    from repro.core.engine import SimulationEngine
+    from repro.core.jobs import Job, JobKind, LINEAR
+
+    profiles = [device_profile("a100-250w")] * 2
+    engines = []
+    for k in range(2):
+        sim = MIGSimulator(make_scheduler("EDF-SS"))
+        engines.append(SimulationEngine(sim, policy=StaticPolicy(3), stream_open=True))
+    # device 0: force an in-flight repartition right now
+    engines[0].sim._start_repartition(6)
+    states = [EngineDeviceState(i, p, e) for i, (p, e) in enumerate(zip(profiles, engines))]
+    job = Job(99, JobKind.INFERENCE, 0.0, 1.0, 10.0, LINEAR)
+    pick = StateAwareDispatcher().pick(job, 0.0, states)
+    assert pick == 1
+    assert states[0].repartition_remaining_min > 0.0
+    assert states[1].repartition_remaining_min == 0.0
+
+
+def test_engine_device_state_projects_to_observed_instant():
+    """Regression: a device whose clock rests at its last event (e.g. one
+    long job, no events for an hour) must be observed as of the *arrival*
+    instant — between events the backlog drains linearly, so the view
+    projects it instead of reporting the stale last-event number."""
+    from repro.core.engine import SimulationEngine
+    from repro.core.jobs import Job, JobKind, LINEAR
+    from repro.fleet import EngineDeviceState
+
+    prof = device_profile("a100-250w")
+    sim = MIGSimulator(make_scheduler("EDF-SS"))
+    engine = SimulationEngine(sim, policy=StaticPolicy(1), stream_open=True)
+    # one linear job, work 140 1g-min on the 7g slice: runs 0 -> 20 min
+    engine.inject(Job(0, JobKind.TRAINING, 0.0, 140.0, 100.0, LINEAR))
+    engine.run_until(10.0, inclusive=False)  # only the arrival processes
+    assert sim.t == 0.0  # device clock rests at its last event
+    st = EngineDeviceState(0, prof, engine)
+    assert st.backlog_1g_min == pytest.approx(140.0)  # unprojected
+    st.observe_at(10.0)
+    assert st.backlog_1g_min == pytest.approx(140.0 - 7.0 * 10.0)
+    st.observe_at(15.0)
+    assert st.normalized_load == pytest.approx((140.0 - 7.0 * 15.0) / 7.0)
+    # the projection is read-only: the simulation itself is untouched
+    assert sim.t == 0.0 and sim.active[0].remaining == pytest.approx(140.0)
+
+
+def test_online_fleet_dispatch_differs_from_fluid_under_load():
+    """The semantics change the mig-sim-3 bump records: with real state,
+    least-loaded routing sees actual drain rates (not the fluid peak-rate
+    estimate) and makes different choices on a loaded heterogeneous fleet."""
+    spec_kw = dict(profiles=["a100-250w", "a30-165w"], dispatcher="least-loaded")
+    load = WorkloadSpec(horizon_min=360.0, constant_rate=0.8)
+    online = FleetSimulator(FleetSpec.of(**spec_kw)).run(
+        generate_jobs(load, 33), policy_factory=_static_factory(3)
+    )
+    fluid = FleetSimulator(FleetSpec.of(**spec_kw, dispatch_info="fluid")).run(
+        generate_jobs(load, 33), policy_factory=_static_factory(3)
+    )
+    assert sum(online.dispatch_counts) == sum(fluid.dispatch_counts)
+    assert online.dispatch_counts != fluid.dispatch_counts
 
 
 def test_fleet_conservation_and_aggregation():

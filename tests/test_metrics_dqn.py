@@ -109,3 +109,112 @@ def test_reward_weights_switch_penalty_positive():
     rw = RewardWeights()
     assert rw.switch_penalty(5) > 0
     assert rw.interval_reward(100.0, 10.0) < 0
+
+
+# ----------------------------------------------------------------------
+# RepartitionEnv — the incremental environment over the steppable engine
+
+
+def test_env_reset_step_episode_runs_to_completion():
+    from repro.core.rl.env import RepartitionEnv
+
+    env = RepartitionEnv(spec=WorkloadSpec(horizon_min=120.0, constant_rate=0.3))
+    obs = env.reset(seed=1)
+    assert obs.shape == (FEATURE_DIM,)
+    assert not env.done
+    steps, total = 0, 0.0
+    terminated = truncated = False
+    while not env.done:
+        obs, r, terminated, truncated, info = env.step(2)  # stay on config 3
+        total += r
+        steps += 1
+        assert obs.shape == (FEATURE_DIM,)
+        assert info["config_id"] == 3
+    assert terminated and not truncated
+    res = env.result()
+    assert res.num_jobs > 0
+    # initial_config defaults to 2, so the constant action 2 (config 3)
+    # repartitions exactly once, on the very first decision
+    assert res.repartitions == 1
+    assert total < 0  # energy/tardiness costs accrue
+    # the per-decision rewards sum to the episode's integral deltas
+    assert steps > 10
+
+
+def test_env_reward_charges_switch_penalty():
+    """Two identical episodes; the one that repartitions on the first
+    decision pays the switch penalty plus the 4 s stall."""
+    from repro.core.rl.env import RepartitionEnv
+
+    spec = WorkloadSpec(horizon_min=60.0, constant_rate=0.4)
+
+    def first_reward(action):
+        env = RepartitionEnv(spec=spec, initial_config=2)
+        env.reset(seed=5)
+        _, r, _, _, info = env.step(action)
+        return r, info
+
+    r_stay, info_stay = first_reward(1)  # action 1 -> config 2 == current
+    r_switch, info_switch = first_reward(11)  # config 12: forces a repartition
+    assert info_stay["switched"] is False
+    assert info_switch["switched"] is True
+    assert r_switch < r_stay
+
+
+def test_env_truncation_bounds_episode():
+    from repro.core.rl.env import RepartitionEnv
+
+    env = RepartitionEnv(
+        spec=WorkloadSpec(horizon_min=240.0, constant_rate=0.5), max_decisions=7
+    )
+    env.reset(seed=2)
+    n = 0
+    truncated = False
+    while not env.done:
+        _, _, terminated, truncated, _ = env.step(2)
+        n += 1
+    assert n == 7 and truncated
+    with pytest.raises(RuntimeError, match="episode over"):
+        env.step(2)
+    env_t = RepartitionEnv(
+        spec=WorkloadSpec(horizon_min=240.0, constant_rate=0.5),
+        truncate_after_min=30.0,
+    )
+    env_t.reset(seed=2)
+    while not env_t.done:
+        _, _, _, tr, info = env_t.step(2)
+    assert tr and info["t"] >= 30.0
+
+
+def test_env_matches_agent_policy_episode():
+    """Driving the env with a fixed action sequence equals running the
+    simulator one-shot with the equivalent CallbackPolicy — the env is a
+    re-sequencing of the same engine, not a different simulation."""
+    from repro.core.rl.env import RepartitionEnv
+    from repro.core.simulator import CallbackPolicy, MIGSimulator as Sim
+
+    spec = WorkloadSpec(horizon_min=120.0, constant_rate=0.4)
+    actions = [2, 2, 5, 5, 1, 2] * 200  # arbitrary deterministic schedule
+
+    env = RepartitionEnv(spec=spec, initial_config=2)
+    env.reset(seed=9)
+    k = 0
+    while not env.done:
+        env.step(actions[k])
+        k += 1
+    res_env = env.result()
+
+    calls = {"k": 0}
+
+    def fn(t, sim):
+        a = actions[calls["k"]]
+        calls["k"] += 1
+        cfg = a + 1
+        return cfg if cfg != sim.partition.config_id else None
+
+    sim = Sim(make_scheduler("EDF-SS"))
+    res_run = sim.run(
+        generate_jobs(spec, seed=9), policy=CallbackPolicy(fn, initial_config=2)
+    )
+    assert res_env == res_run
+    assert calls["k"] == k
