@@ -14,6 +14,19 @@ throughput show up as a time series rather than a one-off log line.
 
     python scripts/bench_nightly.py                       # append an entry
     python scripts/bench_nightly.py --dry-run             # print, don't write
+    python scripts/bench_nightly.py --gate-events-ratio 0.5   # + regression gate
+
+The trajectory file is written atomically (tmp + rename): a crash mid-write
+can never truncate the history to an empty file, and a missing/empty file
+seeds a fresh list instead of erroring.  ``--gate-events-ratio`` compares
+this run's engine events/sec against the best of the last ``GATE_WINDOW``
+previous entries that recorded one and fails (exit 1) when throughput fell
+below that fraction — a *trajectory-relative* gate that catches gradual
+drift the static CI floor (``bench_engine.py --min-events-per-sec``) is
+too conservative to see, without self-ratcheting onto its own regressed
+entries.  The entry is appended before the gate verdict (a regression is
+recorded in the history it is flagged against); ``--dry-run`` still
+evaluates the gate, it only skips the append.
 """
 
 from __future__ import annotations
@@ -81,11 +94,93 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
     return entry
 
 
+def load_trajectory(path: str) -> list:
+    """The existing trajectory, seeding a fresh list when absent/empty.
+
+    A missing or empty file is a valid starting state (fresh checkout, or a
+    previous run crashed before the atomic rename landed) — it seeds ``[]``
+    so the append path always produces a one-entry trajectory instead of
+    dying and leaving the history stuck at nothing.  Anything else that is
+    not a JSON list is a real corruption and errors out loudly.
+    """
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        text = f.read().strip()
+    if not text:
+        return []
+    try:
+        trajectory = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"{path} holds invalid JSON ({e}); refusing to clobber")
+    if not isinstance(trajectory, list):
+        raise SystemExit(f"{path} is not a JSON list")
+    return trajectory
+
+
+def save_trajectory(path: str, trajectory: list) -> None:
+    """Atomic write: a crash mid-dump can never truncate the history."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trajectory, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+#: how many recent measured entries the throughput gate references
+GATE_WINDOW = 7
+
+
+def check_events_regression(
+    trajectory: list, entry: dict, ratio: float, window: int = GATE_WINDOW
+) -> "str | None":
+    """Trajectory-relative engine-throughput gate.
+
+    Compares ``entry``'s events/sec against the **best** of the ``window``
+    most recent previous entries that recorded one; returns a failure
+    message when this run fell below ``ratio`` of that reference (None =
+    pass, including when either side has no engine-bench record — a
+    missing measurement is not a regression).  Referencing a rolling max
+    rather than only the immediately previous entry keeps the gate from
+    self-ratcheting: a persistent regression (which is recorded in the
+    trajectory by design) keeps failing until throughput recovers or the
+    regressed level ages out of the window, and compounding
+    slightly-under-ratio drift cannot slip through night after night.
+    """
+    now = (entry.get("engine_bench") or {}).get("events_per_sec")
+    if now is None:
+        return None
+    recent = []
+    for prev in reversed(trajectory):
+        if prev is entry:
+            continue
+        prev_eps = (prev.get("engine_bench") or {}).get("events_per_sec")
+        if prev_eps:
+            recent.append((prev_eps, prev.get("date", "?")))
+            if len(recent) >= window:
+                break
+    if not recent:
+        return None
+    ref_eps, ref_date = max(recent)
+    if now < ratio * ref_eps:
+        return (
+            f"ENGINE THROUGHPUT REGRESSION: {now:.0f} ev/s is below "
+            f"{ratio:.0%} of the best of the last {len(recent)} measured "
+            f"trajectory entries ({ref_eps:.0f} ev/s on {ref_date})"
+        )
+    return None
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--sweeps-dir", default=DEFAULT_SWEEPS_DIR)
     ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument(
+        "--gate-events-ratio", type=float, default=None, metavar="R",
+        help="fail (exit 1) when engine events/sec fell below R x the "
+             "previous trajectory entry's (the entry is still appended)",
+    )
     args = ap.parse_args(argv)
 
     entry = collect_entry(args.sweeps_dir)
@@ -93,22 +188,28 @@ def main(argv=None) -> int:
         print(f"no sweep metadata under {args.sweeps_dir}; nothing to record",
               file=sys.stderr)
         return 1
+
+    trajectory = load_trajectory(args.out)
+    # the gate compares against history *before* this run is appended, and
+    # runs under --dry-run too (read-only) so a local gate reproduction
+    # does not silently pass
+    failure = (
+        check_events_regression(trajectory, entry, args.gate_events_ratio)
+        if args.gate_events_ratio is not None
+        else None
+    )
     if args.dry_run:
         print(json.dumps(entry, indent=2))
-        return 0
-
-    trajectory = []
-    if os.path.exists(args.out):
-        with open(args.out) as f:
-            trajectory = json.load(f)
-        if not isinstance(trajectory, list):
-            raise SystemExit(f"{args.out} is not a JSON list")
-    trajectory.append(entry)
-    with open(args.out, "w") as f:
-        json.dump(trajectory, f, indent=2)
-        f.write("\n")
-    print(f"appended entry #{len(trajectory)} to {args.out} "
-          f"({len(entry['grids'])} grids, {entry['total_wall_s']}s total)")
+    else:
+        trajectory.append(entry)
+        save_trajectory(args.out, trajectory)
+        print(f"appended entry #{len(trajectory)} to {args.out} "
+              f"({len(entry['grids'])} grids, {entry['total_wall_s']}s total)")
+    if failure:
+        # the regressed entry is recorded above (unless --dry-run) — the
+        # history must show the dip the gate is complaining about
+        print(failure, file=sys.stderr)
+        return 1
     return 0
 
 

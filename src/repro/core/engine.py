@@ -105,6 +105,14 @@ class SimSnapshot:
     mig_enabled: bool
     repartitioning: bool
     repartition_remaining_min: float
+    #: slot footprint of the in-flight repartition (0 when idle; the whole
+    #: partition in drain mode).  The state-aware fleet dispatcher weights
+    #: the repartition stall by this instead of writing off the device.
+    stalled_slots: int
+    #: slice indices of the current partition with a job running on them —
+    #: what an opportunistic repartitioner checks before tearing an
+    #: instance down (MIG-Serving-style displacement-free reconfiguration)
+    occupied_slices: Tuple[int, ...]
     jobs_in_system: int
     active_jobs: int  # incl. depleted jobs not yet swept by completion
     queue_depth: int
@@ -195,11 +203,23 @@ class SimulationEngine:
         self.stream_open = stream_open
 
         if initial_config is not None:
-            cfg0 = initial_config
+            cfg0, cfg0_src = initial_config, "initial_config override"
         elif policy is not None:
             cfg0 = policy.initial_config
+            cfg0_src = f"policy {type(policy).__name__}.initial_config"
         else:
-            cfg0 = 3
+            cfg0, cfg0_src = 3, "engine default"
+        # validate against the device's table up front: an A100-space
+        # initial config (e.g. CallbackPolicy's default 2) on a smaller
+        # device must fail here with a clear message, not as a bare
+        # KeyError deep inside the first _config() lookup mid-run
+        if cfg0 not in sim.configs:
+            raise ValueError(
+                f"initial config {cfg0} (from {cfg0_src}) is not in this "
+                f"device's partition table (valid ids {sorted(sim.configs)}); "
+                "pass a valid initial_config or wrap the policy in "
+                "repro.fleet.DeviceAdaptedPolicy"
+            )
         sim.reset(cfg0)
 
         self._seq = itertools.count()
@@ -260,6 +280,14 @@ class SimulationEngine:
         sim = self.sim
         self._version += 1
         if sim._repartitioning_until is not None:
+            # mid-repartition: under partial mode jobs on surviving slices
+            # keep running and may complete inside the 4 s window, so their
+            # completion predictions must stay live.  No critical-laxity
+            # follow-up: rescheduling is frozen until REPART_DONE (in drain
+            # mode the assignment is empty and nothing is pushed — the
+            # legacy event sequence, bit for bit).
+            if sim.assignment:
+                self._push_completion_followup()
             return
         self._push_completion_followup()
         crit = sim.scheduler.next_critical_time(
@@ -566,6 +594,8 @@ def snapshot_of(sim: "MIGSimulator") -> SimSnapshot:
         repartition_remaining_min=(
             max(repart_until - sim.t, 0.0) if repart_until is not None else 0.0
         ),
+        stalled_slots=sim.stalled_slots,
+        occupied_slices=tuple(sorted(set(sim.assignment.values()))),
         jobs_in_system=n_inf + n_trn,
         active_jobs=len(sim.active),
         queue_depth=max(len(sim.active) - len(sim.assignment), 0),

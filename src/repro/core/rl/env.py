@@ -172,6 +172,7 @@ class RepartitionEnv:
         truncate_after_min: Optional[float] = None,
         max_decisions: Optional[int] = None,
         m: int = M_JOBS,
+        repartition_mode: str = "partial",
     ) -> None:
         from repro.core.workload import WorkloadSpec
 
@@ -182,6 +183,9 @@ class RepartitionEnv:
         self.rewards = rewards
         self.initial_config = initial_config
         self.mig_enabled = mig_enabled
+        # "partial" (slot-placed transitions) or "drain" (legacy full drain);
+        # the agent trains against whichever physics it will be evaluated on
+        self.repartition_mode = repartition_mode
         self.truncate_after_min = truncate_after_min
         self.max_decisions = max_decisions
         self.m = m
@@ -211,7 +215,9 @@ class RepartitionEnv:
             else:
                 jobs = generate_jobs(self.spec, seed=seed)
         self.sim = MIGSimulator(
-            make_scheduler(self.scheduler_name), mig_enabled=self.mig_enabled
+            make_scheduler(self.scheduler_name),
+            mig_enabled=self.mig_enabled,
+            repartition_mode=self.repartition_mode,
         )
         self.engine = SimulationEngine(
             self.sim,

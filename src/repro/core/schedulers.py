@@ -35,11 +35,35 @@ __all__ = [
     "LeastLaxityFirst",
     "LeastAverageLaxityFirst",
     "make_scheduler",
+    "remap_assignment",
     "SCHEDULERS",
 ]
 
 # job_id -> slice index within the current partition
 Assignment = Dict[int, int]
+
+
+def remap_assignment(
+    current: Assignment, index_map: Mapping[int, int]
+) -> Assignment:
+    """Carry an assignment across a partition change, slice-identity-stable.
+
+    ``index_map`` maps old slice indices to their new indices for slice
+    instances that survive a partial repartition
+    (:class:`repro.core.slices.TransitionPlan`).  Jobs on surviving slices
+    keep their seat under the new numbering; jobs on non-surviving slices
+    must already have been preempted (asserted here — a silent drop would
+    hide a simulator accounting bug).  Preserves iteration order, so the
+    preemption diff in ``MIGSimulator._apply_assignment`` stays stable.
+    """
+    out: Assignment = {}
+    for jid, old_slice in current.items():
+        if old_slice not in index_map:
+            raise AssertionError(
+                f"job {jid} still assigned to non-surviving slice {old_slice}"
+            )
+        out[jid] = index_map[old_slice]
+    return out
 
 
 def _edf_key(job: Job) -> Tuple[float, float, int]:

@@ -1,23 +1,32 @@
-"""MIG slice model and the 12 partition configurations of Fig. 1.
+"""MIG slice model, slot placement, and the 12 configurations of Fig. 1.
 
 The paper partitions an A100-40GB into slices of compute size 1, 2, 3, 4 or 7
 "slots" (SM fractions) with an associated memory size.  Only 12 configurations
 (Fig. 1) are considered; configuration ids are 1-based to match the paper.
 
+Partitions are *slot-placed*: every slice occupies a concrete start offset on
+the device's slot grid, subject to NVIDIA's placement alignment (a 2g slice
+starts on even offsets, 3g/4g on multiples of four, 1g anywhere).  Placement
+is what makes repartitioning *partial*: two configurations that place an
+identical slice instance at the same offset share that GPU instance, and a
+reconfiguration between them destroys/creates only the non-shared instances
+(:func:`transition`) — jobs on shared instances keep running (DESIGN.md §7).
+
 This module is hardware-agnostic: a :class:`SliceType` is (compute slots,
-memory GB) and a :class:`Partition` is an ordered tuple of slice types.  The
-TPU adaptation (``repro.cluster``) reuses the same partition table with chips
-substituted for SM slots (see DESIGN.md §2).
+memory GB) and a :class:`Partition` is an ordered tuple of slice types with
+their start offsets.  The TPU adaptation (``repro.cluster``) reuses the same
+partition table with chips substituted for SM slots (see DESIGN.md §2).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "SliceType",
     "Partition",
+    "TransitionPlan",
     "MIG_CONFIGS",
     "A30_CONFIGS",
     "NUM_CONFIGS",
@@ -25,11 +34,48 @@ __all__ = [
     "ALL_SLICE_SIZES",
     "config",
     "config_ids",
+    "placement_alignment",
+    "auto_starts",
+    "transition",
     "validate_config_table",
 ]
 
 TOTAL_SLOTS = 7
 ALL_SLICE_SIZES = (1, 2, 3, 4, 7)
+
+
+def placement_alignment(slots: int) -> int:
+    """Start-offset alignment of a slice of ``slots`` compute units.
+
+    Encodes NVIDIA's MIG placement grid: 1g slices may start anywhere, 2g
+    slices on even offsets, 3g/4g (and the full-device 7g) on multiples of
+    four.  On the A100's 7-slot grid this yields exactly the documented
+    placements (1g: 0-6, 2g: {0,2,4}, 3g: {0,4}, 4g: {0}, 7g: {0}); the
+    same rule reproduces the A30's 4-slot grid (2g: {0,2}, 4g: {0}).
+    """
+    if slots == 1:
+        return 1
+    if slots == 2:
+        return 2
+    return 4
+
+
+def auto_starts(slot_sizes: Sequence[int]) -> Tuple[int, ...]:
+    """Left-packed placement of ordered slices on the slot grid.
+
+    Walks the slices in order, placing each at the lowest aligned offset at
+    or after the previous slice's end.  This reproduces the canonical NVIDIA
+    layout for every Fig. 1 configuration (including config 5's 1-slot hole:
+    the second 3g slice skips offset 3 to its alignment boundary at 4).
+    """
+    starts: List[int] = []
+    cursor = 0
+    for slots in slot_sizes:
+        a = placement_alignment(slots)
+        start = ((cursor + a - 1) // a) * a
+        starts.append(start)
+        cursor = start + slots
+    return tuple(starts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +108,28 @@ S7_40 = SliceType(7, 40)
 
 @dataclasses.dataclass(frozen=True)
 class Partition:
-    """An ordered MIG partition (one row of Fig. 1)."""
+    """An ordered, slot-placed MIG partition (one row of Fig. 1).
+
+    ``starts`` holds each slice's start offset on the device's slot grid;
+    when omitted it is derived by :func:`auto_starts` (left-packed at NVIDIA
+    placement alignment), which reproduces the canonical layout of every
+    Fig. 1 configuration.
+    """
 
     config_id: int
     slices: Tuple[SliceType, ...]
+    starts: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.starts is None:
+            object.__setattr__(
+                self, "starts", auto_starts(tuple(s.slots for s in self.slices))
+            )
+        elif len(self.starts) != len(self.slices):
+            raise ValueError(
+                f"config {self.config_id}: {len(self.starts)} starts for "
+                f"{len(self.slices)} slices"
+            )
 
     @property
     def num_slices(self) -> int:
@@ -97,8 +161,26 @@ class Partition:
             reverse=descending,
         )
 
+    def slice_instances(self) -> Tuple[Tuple[int, int, int], ...]:
+        """Per-slice placement identity: ``(start, slots, memory_gb)``.
+
+        Two configurations share a physical GPU instance exactly when both
+        contain the same identity triple — the survival criterion of
+        :func:`transition`.
+        """
+        return tuple(
+            (start, s.slots, s.memory_gb)
+            for start, s in zip(self.starts, self.slices)
+        )
+
+    def occupied_cells(self, index: int) -> range:
+        """Grid cells ``[start, start+slots)`` occupied by slice ``index``."""
+        return range(self.starts[index], self.starts[index] + self.slices[index].slots)
+
     def __str__(self) -> str:  # pragma: no cover - repr sugar
-        body = " + ".join(s.name for s in self.slices)
+        body = " + ".join(
+            f"{s.name}@{start}" for start, s in zip(self.starts, self.slices)
+        )
         return f"cfg{self.config_id}[{body}]"
 
 
@@ -155,13 +237,89 @@ A30_CONFIGS: Dict[int, Partition] = {
 }
 
 
+@dataclasses.dataclass(frozen=True)
+class TransitionPlan:
+    """What a reconfiguration ``old -> new`` does to placed slice instances.
+
+    A slice instance *survives* when the identical ``(start, slots,
+    memory_gb)`` placement exists in both configurations — the physical GPU
+    instance is untouched and jobs on it keep running.  Everything else is
+    destroyed (old indices) or created (new indices) and stalls for the
+    §IV-D-3 repartition penalty.
+
+    ``surviving`` maps old slice index -> new slice index (survivor identity
+    across the index renumbering).  ``stalled_slots`` counts the grid cells
+    touched by the rebuild (cells of destroyed ∪ cells of created) — the
+    stall footprint the simulator charges and telemetry reports.
+    """
+
+    old_config_id: int
+    new_config_id: int
+    surviving: Tuple[Tuple[int, int], ...]  # (old index, new index) pairs
+    destroyed: Tuple[int, ...]  # old slice indices torn down
+    created: Tuple[int, ...]  # new slice indices built
+    stalled_slots: int
+
+    @property
+    def survivor_map(self) -> Dict[int, int]:
+        """``surviving`` as an old-index -> new-index dict."""
+        return dict(self.surviving)
+
+    @property
+    def full_turnover(self) -> bool:
+        """True when no slice instance survives (drain-equivalent switch)."""
+        return not self.surviving
+
+
+def transition(old: Partition, new: Partition) -> TransitionPlan:
+    """Plan the partial reconfiguration ``old -> new`` (DESIGN.md §7).
+
+    Matches placed slice instances by identity (same start offset, compute
+    width, and memory): matches survive with their jobs, the rest are
+    destroyed/created.  ``transition(p, p)`` is the identity plan (everything
+    survives, nothing stalls); a plan with no survivors is exactly the
+    legacy full-drain model.
+    """
+    old_by_key = {key: i for i, key in enumerate(old.slice_instances())}
+    surviving: List[Tuple[int, int]] = []
+    created: List[int] = []
+    for j, key in enumerate(new.slice_instances()):
+        i = old_by_key.get(key)
+        if i is not None:
+            surviving.append((i, j))
+        else:
+            created.append(j)
+    matched_old = {i for i, _ in surviving}
+    destroyed = tuple(i for i in range(old.num_slices) if i not in matched_old)
+    cells = set()
+    for i in destroyed:
+        cells.update(old.occupied_cells(i))
+    for j in created:
+        cells.update(new.occupied_cells(j))
+    return TransitionPlan(
+        old_config_id=old.config_id,
+        new_config_id=new.config_id,
+        surviving=tuple(surviving),
+        destroyed=destroyed,
+        created=tuple(created),
+        stalled_slots=len(cells),
+    )
+
+
 def validate_config_table(
     configs: Dict[int, Partition],
     max_slots: int,
     max_memory_gb: int,
     max_1g10_slices: int | None = None,
 ) -> None:
-    """Sanity-check a device's partition table (invoked at import, cheap)."""
+    """Sanity-check a device's partition table (invoked at import, cheap).
+
+    Besides the capacity checks, verifies every configuration is *placement
+    valid* on the device's slot grid: starts respect the NVIDIA alignment
+    rule (:func:`placement_alignment`), slices stay inside the grid, and no
+    two slices overlap — the preconditions the :func:`transition` instance
+    matching relies on.
+    """
     for cid, part in configs.items():
         if part.config_id != cid:
             raise AssertionError(f"config id mismatch for {cid}")
@@ -173,6 +331,26 @@ def validate_config_table(
             n_1g10 = sum(1 for s in part.slices if s == S1_10)
             if n_1g10 > max_1g10_slices:
                 raise AssertionError(f"config {cid} has {n_1g10} 1g.10gb slices")
+        occupied: set = set()
+        for i, (start, s) in enumerate(zip(part.starts, part.slices)):
+            if start % placement_alignment(s.slots) != 0:
+                raise AssertionError(
+                    f"config {cid} slice {i} ({s.name}) starts at {start}, "
+                    f"violating the {placement_alignment(s.slots)}-slot "
+                    "placement alignment"
+                )
+            cells = set(part.occupied_cells(i))
+            if start < 0 or start + s.slots > max_slots:
+                raise AssertionError(
+                    f"config {cid} slice {i} ({s.name}@{start}) leaves the "
+                    f"{max_slots}-slot grid"
+                )
+            if occupied & cells:
+                raise AssertionError(
+                    f"config {cid} slice {i} ({s.name}@{start}) overlaps "
+                    "another slice"
+                )
+            occupied |= cells
 
 
 # A100 Fig. 1 table: at most one 1g.10gb slice per configuration (paper §III-A)

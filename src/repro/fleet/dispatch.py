@@ -168,6 +168,23 @@ class EngineDeviceState:
         return max(self._snap.repartition_remaining_min - self._gap_min, 0.0)
 
     @property
+    def stalled_slots(self) -> int:
+        """Slot footprint of the in-flight repartition (0 when idle).
+
+        Under partial repartitioning only the rebuilt slice instances
+        stall — a device mid-reconfiguration with most of its slots
+        surviving is a far better routing target than one fully drained.
+        """
+        if self.repartition_remaining_min <= 0.0:
+            return 0
+        return self._snap.stalled_slots
+
+    @property
+    def stalled_fraction(self) -> float:
+        """``stalled_slots`` over the device's total slots, in [0, 1]."""
+        return min(self.stalled_slots / self.profile.total_slots, 1.0)
+
+    @property
     def free_slices(self) -> int:
         """Unoccupied slices of the *current* partition (0 mid-repartition)."""
         snap = self._snap
@@ -251,17 +268,21 @@ class StateAwareDispatcher:
     Scores each device by an expected-start-delay proxy the fluid estimate
     cannot compute:
 
-    ``delay = normalized_load + repartition_remaining + congestion``
+    ``delay = normalized_load + repartition_remaining · stalled_fraction
+    + congestion``
 
     where ``normalized_load`` is the device's *actual* outstanding work over
-    its peak drain rate, ``repartition_remaining`` the minutes the GPU stays
-    blocked by an in-flight repartition (arrivals routed there stall), and
-    ``congestion`` a one-device-minute step when the current partition has
-    no free slice (the job must wait for a completion or preemption rather
-    than starting immediately).  Ties break toward the cheaper marginal
-    watt at the device's current busy slots, then the lower index — so on
-    an idle fleet it packs like ``energy-greedy``, but never onto a device
-    that is mid-repartition or visibly congested.
+    its peak drain rate, ``repartition_remaining`` the minutes an in-flight
+    repartition keeps slots stalled — weighted by the snapshot's
+    ``stalled_slots`` share of the device, because under partial
+    repartitioning the surviving slices keep serving and a mostly-surviving
+    transition barely delays an arrival — and ``congestion`` a
+    one-device-minute step when the current partition has no free slice
+    (the job must wait for a completion or preemption rather than starting
+    immediately).  Ties break toward the cheaper marginal watt at the
+    device's current busy slots, then the lower index — so on an idle
+    fleet it packs like ``energy-greedy``, but never onto a device that is
+    visibly congested or mid-way through a full rebuild.
 
     Requires online dispatch (``requires_online``): the fluid two-phase
     mode has no partition or repartition state to read.
@@ -278,7 +299,10 @@ class StateAwareDispatcher:
         """Device minimizing (expected start delay, marginal watts, index)."""
         def key(i: int):
             st = states[i]
-            delay = st.normalized_load + st.repartition_remaining_min
+            delay = (
+                st.normalized_load
+                + st.repartition_remaining_min * st.stalled_fraction
+            )
             if st.free_slices == 0:
                 delay += self.CONGESTION_STEP_MIN
             power = st.profile.power

@@ -74,22 +74,28 @@ class FleetSpec:
     ``dispatch_info`` selects what the dispatcher observes: ``"online"``
     (default) co-advances per-device engines and exposes real state;
     ``"fluid"`` is the legacy backlog-estimate pre-split.
+    ``repartition_mode`` is applied to every device simulator — ``"partial"``
+    (slot-placed transitions, the default) or ``"drain"`` (legacy full
+    drain); see :class:`repro.core.simulator.MIGSimulator`.
     """
 
     devices: Tuple[FleetDeviceSpec, ...]
     dispatcher: str = "round-robin"
     scheduler: str = "EDF-SS"
     dispatch_info: str = "online"
+    repartition_mode: str = "partial"
 
     @staticmethod
     def of(profiles: Sequence[str], dispatcher: str = "round-robin",
-           scheduler: str = "EDF-SS", dispatch_info: str = "online") -> "FleetSpec":
+           scheduler: str = "EDF-SS", dispatch_info: str = "online",
+           repartition_mode: str = "partial") -> "FleetSpec":
         """Shorthand: a fleet from profile names with no per-device overrides."""
         return FleetSpec(
             devices=tuple(FleetDeviceSpec(profile=p) for p in profiles),
             dispatcher=dispatcher,
             scheduler=scheduler,
             dispatch_info=dispatch_info,
+            repartition_mode=repartition_mode,
         )
 
 
@@ -300,6 +306,7 @@ class FleetSimulator:
                 power_model=prof.power,
                 mig_enabled=self.mig_enabled,
                 config_table=prof.configs,
+                repartition_mode=self.spec.repartition_mode,
             )
             engines.append(
                 SimulationEngine(
@@ -382,6 +389,7 @@ class FleetSimulator:
                 power_model=prof.power,
                 mig_enabled=self.mig_enabled,
                 config_table=prof.configs,
+                repartition_mode=self.spec.repartition_mode,
             )
             res = sim.run(
                 subset,

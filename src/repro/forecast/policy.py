@@ -42,8 +42,12 @@ import numpy as np
 
 from repro.core.jobs import SUBLINEAR_CURVES, Elasticity, LINEAR, capped
 from repro.core.power import A100_250W, PowerModel
-from repro.core.simulator import REPARTITION_PENALTY_MIN, MIGSimulator
-from repro.core.slices import MIG_CONFIGS, Partition
+from repro.core.simulator import (
+    REPARTITION_MODES,
+    REPARTITION_PENALTY_MIN,
+    MIGSimulator,
+)
+from repro.core.slices import MIG_CONFIGS, Partition, transition
 
 __all__ = [
     "expected_throughput",
@@ -236,6 +240,25 @@ class ForecastPolicy:
     reconsider_min:
         Period of the policy's own timer, so quiet stretches without
         arrivals still get decision points (e.g. the evening ramp-down).
+    max_defer_min:
+        Opportunistic-switch window (partial mode only): a wanted switch
+        that would displace jobs running on to-be-destroyed slices is
+        deferred — decision points recur at every completion, so within a
+        couple of minutes the affected instances usually drain and the
+        reconfiguration lands displacement-free, exactly how
+        MIG-Serving-style schedulers time reconfigurations around running
+        services.  After ``max_defer_min`` minutes the switch proceeds
+        anyway (the lookahead's improvement must not rot while the GPU
+        waits for a long training job).
+    repartition_mode:
+        How the simulator this policy controls charges a reconfiguration —
+        must match the simulator's own mode so the lookahead prices what
+        the physics will charge.  ``"partial"`` (default): a switching
+        candidate keeps the transition's *surviving* slot capacity serving
+        through the 4 s stall and only the displaced share of in-flight
+        work pays the upfront requeue wait; ``"drain"``: the legacy flat
+        full-drain penalty (zero service during the stall, everything
+        displaced).
     """
 
     def __init__(
@@ -255,7 +278,14 @@ class ForecastPolicy:
         mean_work_inf: float = _MEAN_WORK_INF,
         mean_work_trn: float = _MEAN_WORK_TRN,
         repartition_penalty_min: float = REPARTITION_PENALTY_MIN,
+        repartition_mode: str = "partial",
+        max_defer_min: float = 3.0,
     ) -> None:
+        if repartition_mode not in REPARTITION_MODES:
+            raise ValueError(
+                f"unknown repartition_mode {repartition_mode!r}; "
+                f"valid: {REPARTITION_MODES}"
+            )
         if forecaster is None:
             from repro.forecast.forecaster import ArrivalForecaster, fit_scenario_forecaster
 
@@ -277,6 +307,13 @@ class ForecastPolicy:
         self.mean_work_inf = mean_work_inf
         self.mean_work_trn = mean_work_trn
         self.penalty_min = repartition_penalty_min
+        self.repartition_mode = repartition_mode
+        self.max_defer_min = max_defer_min
+        # memoized surviving-capacity fraction per (from, to) candidate pair
+        self._surv_frac_cache: Dict[Tuple[int, int], float] = {}
+        # opportunistic-switch deferral state: (wanted config, since when)
+        self._defer_target: Optional[int] = None
+        self._defer_since: float = 0.0
 
         # per-config seating order, mirroring EDF-SS's smallest-sufficient
         # placement: >=2g slices ascending (the smallest slice that meets a
@@ -361,18 +398,39 @@ class ForecastPolicy:
 
         best, costs = self._best_config(t, n_inf, w_inf, n_trn, w_trn, current)
         if best == current:
+            # the want lapsed: a later re-wanted switch must open a fresh
+            # deferral window, not inherit a stale _defer_since
+            self._defer_target = None
             return None
         if current not in costs:
             # the running layout is outside the candidate set (an
             # ``initial_config`` override): adopt the lookahead winner
             # immediately — there is no priced incumbent to defend
+            self._defer_target = None
             self._last_switch_t = t
             return best
         improvement = costs[current] - costs[best]
         shrinking = self.configs[best].num_slices < self.configs[current].num_slices
         margin = self.downsize_margin if shrinking else self.switch_margin
         if improvement <= margin * max(abs(costs[current]), 1e-9):
+            self._defer_target = None
             return None
+        if self.repartition_mode == "partial":
+            # opportunistic switch timing: if the transition would tear down
+            # a slice instance with a job still running on it, defer — the
+            # next completions open displacement-free instants within
+            # minutes, and a partial reconfiguration at such an instant
+            # preempts nothing.  Bounded by max_defer_min so a long
+            # training job cannot pin a stale layout indefinitely.
+            plan = transition(self.configs[current], self.configs[best])
+            surviving = {i for i, _ in plan.surviving}
+            if any(s not in surviving for s in snap.occupied_slices):
+                if self._defer_target != best:
+                    self._defer_target = best
+                    self._defer_since = t
+                if t - self._defer_since < self.max_defer_min:
+                    return None
+        self._defer_target = None
         self._last_switch_t = t
         return best
 
@@ -384,6 +442,8 @@ class ForecastPolicy:
         self._last_eval_t = -math.inf
         self._last_eval_n = 0.0
         self._last_switch_t = -math.inf
+        self._defer_target = None
+        self._defer_since = 0.0
         if hasattr(self.forecaster, "reset"):
             self.forecaster.reset()
 
@@ -420,11 +480,34 @@ class ForecastPolicy:
             cid: self._predict_cost(
                 cid, t, n_inf, w_inf, n_trn, w_trn,
                 switch=(cid != current), horizon_min=horizon,
+                survive_frac=self._survive_frac(current, cid),
             )
             for cid in self.configs
         }
         best = min(costs, key=lambda cid: (costs[cid], cid))
         return best, costs
+
+    def _survive_frac(self, current: Optional[int], cand: int) -> float:
+        """Fraction of the incumbent's slot capacity that survives a switch
+        to ``cand`` (0 under drain mode, for an unknown incumbent, or full
+        turnover) — what makes the lookahead price a *partial* transition
+        instead of the flat full-drain stall."""
+        if (
+            self.repartition_mode != "partial"
+            or current is None
+            or current == cand
+            or current not in self.configs
+        ):
+            return 0.0
+        key = (current, cand)
+        frac = self._surv_frac_cache.get(key)
+        if frac is None:
+            old = self.configs[current]
+            plan = transition(old, self.configs[cand])
+            surviving_slots = sum(old.slices[i].slots for i, _ in plan.surviving)
+            frac = surviving_slots / max(old.total_slots, 1)
+            self._surv_frac_cache[key] = frac
+        return frac
 
     def _predict_cost(
         self,
@@ -436,8 +519,17 @@ class ForecastPolicy:
         w_trn: float,
         switch: bool,
         horizon_min: Optional[float] = None,
+        survive_frac: float = 0.0,
     ) -> float:
-        """Predicted ET of running ``config_id`` over the lookahead horizon."""
+        """Predicted ET of running ``config_id`` over the lookahead horizon.
+
+        ``survive_frac`` is the slot-capacity fraction that survives the
+        transition into ``config_id`` (partial repartitioning): during the
+        §IV-D-3 stall the candidate keeps serving at that fraction of its
+        occupancy-appropriate rate, and only the displaced ``1 -
+        survive_frac`` share of in-flight work pays the upfront requeue
+        wait.  ``0.0`` reproduces the flat full-drain pricing exactly.
+        """
         if horizon_min is None:
             horizon_min = self.horizon_min
         srv_table = self._srv[config_id]
@@ -462,21 +554,50 @@ class ForecastPolicy:
         # front — the burst signal that makes the controller react to a
         # queue spike instead of only pricing future arrivals
         if ni + nt > 1e-9:
-            wait0 = (wi + wt) / mu_full + (self.penalty_min if switch else 0.0)
-            tard_job_min += (ni + nt) * self._expected_lateness(config_id, wait0)
+            # jobs already in the system split into two populations across a
+            # switch: runners on *surviving* slice instances keep going and
+            # only face the backlog drain, while displaced runners and the
+            # queue requeue behind the stall and eat the full penalty.  The
+            # lateness curve prices the 4 s slip marginally — at a quiet
+            # moment every job has headroom and the term vanishes (the
+            # nightly consolidation to the full GPU stays free), under load
+            # tearing through a busy layout costs real predicted lateness.
+            # survive_frac = 0 (drain pricing / full turnover) collapses to
+            # the legacy flat full-drain charge, bit for bit.
+            n_tot0 = ni + nt
+            base_wait = (wi + wt) / mu_full
+            if switch:
+                surv_jobs = survive_frac * min(n_tot0, float(num_slices))
+                tard_job_min += surv_jobs * self._expected_lateness(
+                    config_id, base_wait
+                )
+                tard_job_min += (n_tot0 - surv_jobs) * self._expected_lateness(
+                    config_id, base_wait + self.penalty_min
+                )
+            else:
+                tard_job_min += n_tot0 * self._expected_lateness(config_id, base_wait)
         # a switching candidate starts with the repartition stall: arrivals
-        # queue, nothing is served, the GPU idles (§IV-D-3)
+        # queue and only the transition's surviving capacity keeps serving
+        # (none of it under drain mode — the GPU idles, §IV-D-3)
         blocked = self.penalty_min if switch else 0.0
         while remaining > 1e-9:
             dt = min(self.step_min, remaining)
             lam = rate(t)
+            n_tot = ni + nt
             if blocked > 0.0:
                 dt = min(dt, blocked)
-                watts = pwr_table[0]
-                srv_i = srv_t = 0.0
+                # occupancy scaled to the surviving capacity fraction: a
+                # partial transition serves (and draws power) at the
+                # surviving slices' share of the normal rate
+                x = min(n_tot, float(num_slices)) * survive_frac
+                k_lo = min(int(x), num_slices - 1) if num_slices else 0
+                frac = x - k_lo
+                srv_total = srv_table[k_lo] + frac * (srv_table[k_lo + 1] - srv_table[k_lo])
+                watts = pwr_table[k_lo] + frac * (pwr_table[k_lo + 1] - pwr_table[k_lo])
+                srv_t = srv_total * (nt / n_tot) if n_tot > 1e-12 else 0.0
+                srv_i = srv_total - srv_t
                 blocked -= dt
             else:
-                n_tot = ni + nt
                 # continuous occupancy: k_lo seats fully busy, one more busy
                 # ``frac`` of the time — service and power interpolate over
                 # occupancy *levels* (duty cycle), not over busy slots

@@ -34,6 +34,7 @@ from repro.core.metrics import SimResult
 from repro.core.scenarios import generate_scenario, resolve_scenario_kwargs
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import (
+    REPARTITION_MODES,
     SIM_VERSION,
     DayNightPolicy,
     MIGSimulator,
@@ -48,6 +49,7 @@ __all__ = [
     "canonical_json",
     "cell_hash",
     "cell_jobs",
+    "cell_repartition_mode",
     "make_cell",
     "make_fleet_cell",
     "make_policy",
@@ -58,6 +60,32 @@ __all__ = [
 ]
 
 Cell = Dict[str, Any]
+
+
+def cell_repartition_mode(cell: Cell) -> str:
+    """The transition model a cell runs under.
+
+    Cells built since ``mig-sim-4`` carry the key explicitly; a cell without
+    it predates slot placement and replays under the legacy full-drain model
+    (that compatibility rule is what lets the drain path reproduce old
+    baselines bit-identically).
+    """
+    return cell.get("repartition_mode", "drain")
+
+
+def _cell_policy_kwargs(cell: Cell) -> Dict[str, Any]:
+    """The cell's policy kwargs, with mode-coupled defaults resolved.
+
+    The forecast controller's MPC lookahead must price the same transition
+    physics the simulator charges, so unless the cell pins the policy's
+    ``repartition_mode`` explicitly it inherits the cell's simulator mode —
+    in particular, legacy (pre-mig-sim-4) forecast cells replay with drain
+    pricing, exactly as they originally ran.
+    """
+    kwargs = dict(cell.get("policy_kwargs") or {})
+    if cell.get("policy") == "forecast":
+        kwargs.setdefault("repartition_mode", cell_repartition_mode(cell))
+    return kwargs
 
 
 # ----------------------------------------------------------------------
@@ -155,8 +183,14 @@ def _base_cell(
     policy: str,
     policy_kwargs: Optional[Mapping[str, Any]],
     mig_enabled: bool,
+    repartition_mode: str,
 ) -> Cell:
     """The fields every cell shares; workload/scenario keys are added on top."""
+    if repartition_mode not in REPARTITION_MODES:
+        raise ValueError(
+            f"unknown repartition_mode {repartition_mode!r}; "
+            f"valid: {REPARTITION_MODES}"
+        )
     policy_kwargs = dict(policy_kwargs or {})
     # Policies that load weights from disk are only content-addressable if the
     # weights themselves enter the hash: a retrained checkpoint at the same
@@ -171,6 +205,10 @@ def _base_cell(
         "policy_kwargs": policy_kwargs,
         "seed": int(seed),
         "mig_enabled": bool(mig_enabled),
+        # resolved explicitly into the cell (the hash must capture the mode
+        # the simulator ran under); cells *without* the key are pre-mig-sim-4
+        # and replay under the legacy drain model (see run_cell)
+        "repartition_mode": repartition_mode,
     }
 
 
@@ -184,6 +222,7 @@ def make_cell(
     policy: str = "static",
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
+    repartition_mode: str = "partial",
 ) -> Cell:
     """A single-GPU cell whose jobs come from a raw :class:`WorkloadSpec`."""
     cell = _base_cell(
@@ -194,6 +233,7 @@ def make_cell(
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
+        repartition_mode=repartition_mode,
     )
     cell["workload"] = workload_to_dict(workload)
     return cell
@@ -210,6 +250,7 @@ def make_scenario_cell(
     policy: str = "static",
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
+    repartition_mode: str = "partial",
 ) -> Cell:
     """A cell whose jobs come from a registered scenario, not a raw spec.
 
@@ -225,6 +266,7 @@ def make_scenario_cell(
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
+        repartition_mode=repartition_mode,
     )
     cell["scenario"] = {
         "name": scenario,
@@ -247,6 +289,7 @@ def make_fleet_cell(
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
     dispatch_info: str = "online",
+    repartition_mode: str = "partial",
 ) -> Cell:
     """A fleet cell: N devices (by profile name) behind a dispatcher.
 
@@ -268,6 +311,7 @@ def make_fleet_cell(
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
+        repartition_mode=repartition_mode,
     )
     cell["fleet"] = {
         "devices": [{"profile": p} for p in profiles],
@@ -350,6 +394,7 @@ def _run_fleet_cell(
         dispatcher=f["dispatcher"],
         scheduler=cell["scheduler"],
         dispatch_info=f.get("info", "online"),
+        repartition_mode=cell_repartition_mode(cell),
     )
     if policy_factory is not None:
         def per_device_policy(i, prof):
@@ -357,7 +402,7 @@ def _run_fleet_cell(
     else:
         def per_device_policy(i, prof):
             # independent instance per device: policies carry run state
-            return make_policy(cell["policy"], cell.get("policy_kwargs"))
+            return make_policy(cell["policy"], _cell_policy_kwargs(cell))
 
     t0 = time.perf_counter()
     jobs = cell_jobs(cell)
@@ -401,9 +446,11 @@ def run_cell(
     if policy_factory is not None:
         policy = policy_factory()
     else:
-        policy = make_policy(cell["policy"], cell.get("policy_kwargs"))
+        policy = make_policy(cell["policy"], _cell_policy_kwargs(cell))
     sim = MIGSimulator(
-        make_scheduler(cell["scheduler"]), mig_enabled=cell["mig_enabled"]
+        make_scheduler(cell["scheduler"]),
+        mig_enabled=cell["mig_enabled"],
+        repartition_mode=cell_repartition_mode(cell),
     )
     t0 = time.perf_counter()
     res = sim.run(jobs, policy=policy)

@@ -646,6 +646,98 @@ def _repartition_policies_aggregate(
 
 
 # ----------------------------------------------------------------------
+# repartition_modes — drain vs partial reconfiguration × repartitioning
+# policy families × scenarios.  The measurable form of the slot-placement
+# fidelity fix: under "partial" only the slice instances that change are
+# rebuilt and jobs on surviving instances run through the 4 s stall, so a
+# policy family's preemption count can only fall and its ET should hold or
+# improve.  Only families that actually repartition are raced (a static
+# policy is mode-invariant by construction — pinned by tests instead of
+# paid for in CI cells); forecast cells carry the mode in policy_kwargs so
+# the MPC lookahead prices the same transition physics the simulator
+# charges.  Same seeds across modes: each drain/partial pair sees an
+# identical job stream.
+
+#: (family name, cell overrides) — families whose policies repartition
+REPARTITION_MODE_FAMILIES: List[Tuple[str, Dict[str, Any]]] = [
+    ("DayNightMIG", {"policy": "daynight"}),
+    ("Heuristic", {"policy": "heuristic"}),
+    ("Forecast", {"policy": "forecast"}),
+]
+
+#: the two transition models raced by the grid, in fixed row order
+REPARTITION_MODE_ORDER = ("drain", "partial")
+
+
+def _repartition_modes_cells(scale: float) -> List[Cell]:
+    # 8 seeds at any scale: the drain-vs-partial ET deltas are small
+    # relative to single-run tardiness noise, and the acceptance property
+    # pinned on this grid's baseline (partial strictly cuts preemptions at
+    # equal-or-better ET for the forecast family) needs the row averaged
+    # over enough days to reflect the systematic effect, not one seed's
+    # tardy outlier
+    iters = _iters(8, scale, floor=8)
+    cells: List[Cell] = []
+    for si, sname in enumerate(SCENARIO_ORDER):
+        for fname, overrides in REPARTITION_MODE_FAMILIES:
+            for mode in REPARTITION_MODE_ORDER:
+                ov = {
+                    k: dict(v) if isinstance(v, dict) else v
+                    for k, v in overrides.items()
+                }
+                if ov.get("policy") == "forecast":
+                    # the controller must price what the simulator charges
+                    ov["policy_kwargs"] = {
+                        "scenario": sname,
+                        "repartition_mode": mode,
+                    }
+                for k in range(iters):
+                    cells.append(
+                        make_scenario_cell(
+                            experiment="repartition_modes",
+                            group=f"{sname}:{fname}:{mode}",
+                            scheduler="EDF-SS",
+                            scenario=sname,
+                            seed=73_500 + 97 * si + k,
+                            repartition_mode=mode,
+                            **ov,
+                        )
+                    )
+    return cells
+
+
+def _repartition_modes_aggregate(
+    cells: List[Cell], results: List[Dict[str, Any]]
+) -> Rows:
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for sname in SCENARIO_ORDER:
+        # shared ET scale factor per scenario across every family × mode,
+        # so the drain/partial columns of one row are directly comparable
+        per = {g: rs for g, rs in grouped.items() if g.startswith(f"{sname}:")}
+        t, a = et_table(per)
+        for fname, _ in REPARTITION_MODE_FAMILIES:
+            by_mode = {
+                mode: per[f"{sname}:{fname}:{mode}"]
+                for mode in REPARTITION_MODE_ORDER
+            }
+            row: Dict[str, Any] = {"scenario": sname, "family": fname, "et_a": a}
+            for mode in REPARTITION_MODE_ORDER:
+                rs = by_mode[mode]
+                row[f"ET_{mode}"] = t[f"{sname}:{fname}:{mode}"]
+                row[f"preemptions_{mode}"] = sum(r.preemptions for r in rs) / len(rs)
+                row[f"repartitions_{mode}"] = sum(r.repartitions for r in rs) / len(rs)
+            row["partial_cuts_preemptions"] = (
+                row["preemptions_partial"] < row["preemptions_drain"]
+            )
+            row["partial_et_gain_pct"] = 100.0 * (
+                1.0 - row["ET_partial"] / max(row["ET_drain"], 1e-12)
+            )
+            rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------------
 # smoke — a compact CI grid (subset of the Table II basket)
 
 
@@ -685,6 +777,7 @@ GRIDS: Dict[str, GridDef] = {
         GridDef("dispatchers", "Online (real-state) vs fluid (estimate) dispatch per dispatcher", _dispatchers_cells, _dispatchers_aggregate),
         GridDef("scenario_matrix", "Scenario library x the four schedulers", _scenario_matrix_cells, _scenario_matrix_aggregate),
         GridDef("repartition_policies", "Policy families x scenarios (incl. predictive controller)", _repartition_policies_cells, _repartition_policies_aggregate),
+        GridDef("repartition_modes", "Drain vs partial reconfiguration per policy family x scenario", _repartition_modes_cells, _repartition_modes_aggregate),
         GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),
     ]
 }

@@ -1,0 +1,148 @@
+"""bench_nightly.py: trajectory append/seed robustness + the events gate.
+
+Regression tests for the nightly-trajectory satellite: the append path must
+seed a fresh list when the file is missing or empty (instead of dying and
+leaving the history stuck at nothing), write atomically so a crash cannot
+truncate the trajectory, and gate engine events/sec against the *previous*
+trajectory entry rather than only the static CI floor.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_nightly",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "bench_nightly.py"),
+)
+bench_nightly = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_nightly)
+
+
+def _entry(date, eps=None, grids=None):
+    e = {"date": date, "git_sha": "x", "sim_version": "t",
+         "grids": grids or {"g": {"wall_s": 1.0}}, "total_wall_s": 1.0}
+    if eps is not None:
+        e["engine_bench"] = {"events_per_sec": eps}
+    return e
+
+
+# ----------------------------------------------------------------------
+# load / seed / save
+
+
+def test_load_trajectory_seeds_missing_and_empty(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    assert bench_nightly.load_trajectory(path) == []
+    open(path, "w").write("")
+    assert bench_nightly.load_trajectory(path) == []
+    open(path, "w").write("   \n")
+    assert bench_nightly.load_trajectory(path) == []
+    open(path, "w").write("[]\n")
+    assert bench_nightly.load_trajectory(path) == []
+
+
+def test_load_trajectory_refuses_corruption(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    open(path, "w").write("{not json")
+    with pytest.raises(SystemExit, match="invalid JSON"):
+        bench_nightly.load_trajectory(path)
+    open(path, "w").write('{"a": 1}')
+    with pytest.raises(SystemExit, match="not a JSON list"):
+        bench_nightly.load_trajectory(path)
+
+
+def test_save_and_append_round_trip(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    for i in range(3):
+        trajectory = bench_nightly.load_trajectory(path)
+        assert len(trajectory) == i
+        trajectory.append(_entry(f"2026-08-0{i + 1}", eps=1000.0 + i))
+        bench_nightly.save_trajectory(path, trajectory)
+    final = json.load(open(path))
+    assert [e["date"] for e in final] == ["2026-08-01", "2026-08-02", "2026-08-03"]
+    assert not os.path.exists(path + ".tmp")  # atomic rename landed
+
+
+# ----------------------------------------------------------------------
+# trajectory-relative events/sec gate
+
+
+def test_gate_passes_without_history_or_measurements():
+    entry = _entry("2026-08-02", eps=5000.0)
+    assert bench_nightly.check_events_regression([], entry, 0.5) is None
+    # previous entries without an engine bench cannot gate
+    hist = [_entry("2026-08-01")]
+    assert bench_nightly.check_events_regression(hist, entry, 0.5) is None
+    # an entry without a measurement is not a regression
+    assert bench_nightly.check_events_regression(
+        [_entry("2026-08-01", eps=9000.0)], _entry("2026-08-02"), 0.5
+    ) is None
+
+
+def test_gate_references_best_of_recent_window():
+    hist = [
+        _entry("2026-07-30", eps=10000.0),
+        _entry("2026-07-31"),  # no measurement: skipped, not a zero
+        _entry("2026-08-01", eps=8000.0),
+    ]
+    ok = bench_nightly.check_events_regression(hist, _entry("2026-08-02", eps=5100.0), 0.5)
+    assert ok is None  # 5100 >= 0.5 * max(10000, 8000)
+    bad = bench_nightly.check_events_regression(hist, _entry("2026-08-02", eps=4900.0), 0.5)
+    assert bad is not None and "10000" in bad and "2026-07-30" in bad
+    # the window bounds how far back the reference reaches
+    far = bench_nightly.check_events_regression(
+        hist, _entry("2026-08-02", eps=4900.0), 0.5, window=1
+    )
+    assert far is None  # only 8000 in window: 4900 >= 0.5 * 8000
+
+
+def test_gate_does_not_ratchet_onto_its_own_regressed_entries():
+    """A persistent regression keeps failing night after night (the
+    regressed entries are recorded by design and must not become the new
+    reference), and compounding slightly-under-ratio drift cannot slip
+    through."""
+    hist = [_entry("2026-07-30", eps=6000.0)]
+    for day, eps in (("2026-07-31", 2500.0), ("2026-08-01", 2500.0)):
+        verdict = bench_nightly.check_events_regression(hist, _entry(day, eps=eps), 0.5)
+        assert verdict is not None and "6000" in verdict
+        hist.append(_entry(day, eps=eps))  # the failed entry is still recorded
+    # 40%-per-night decay: each step passes vs the previous night alone,
+    # but fails against the rolling best once cumulative drift crosses 0.5x
+    hist2 = [_entry("2026-07-28", eps=10000.0), _entry("2026-07-29", eps=6000.0)]
+    assert bench_nightly.check_events_regression(
+        hist2, _entry("2026-07-30", eps=3600.0), 0.5
+    ) is not None
+
+
+def test_main_appends_and_gates(tmp_path, monkeypatch, capsys):
+    sweeps = tmp_path / "sweeps"
+    sweeps.mkdir()
+    (sweeps / "g.meta.json").write_text(json.dumps(
+        {"name": "g", "cells": 4, "cached": 1, "computed": 3,
+         "workers": 2, "wall_s": 1.5}
+    ))
+    out = str(tmp_path / "BENCH.json")
+    args = ["--out", out, "--sweeps-dir", str(sweeps)]
+    assert bench_nightly.main(args) == 0
+    assert bench_nightly.main(args) == 0  # append accumulates per run
+    trajectory = json.load(open(out))
+    assert len(trajectory) == 2
+    assert trajectory[0]["grids"]["g"]["cache_hit_rate"] == 0.25
+    # a gate failure still appends the regressed entry first
+    trajectory[-1]["engine_bench"] = {"events_per_sec": 10000.0}
+    bench_nightly.save_trajectory(out, trajectory)
+    monkeypatch.setattr(
+        bench_nightly, "collect_entry",
+        lambda sweeps_dir: {**_entry("2026-08-02", eps=100.0)},
+    )
+    assert bench_nightly.main(args + ["--gate-events-ratio", "0.5"]) == 1
+    assert len(json.load(open(out))) == 3
+    assert "REGRESSION" in capsys.readouterr().err
+    # --dry-run still evaluates the gate (read-only): fails without append
+    assert bench_nightly.main(
+        args + ["--gate-events-ratio", "0.5", "--dry-run"]
+    ) == 1
+    assert len(json.load(open(out))) == 3  # nothing appended

@@ -60,9 +60,11 @@ def test_a30_table_is_valid_for_the_simulator():
     )
     res = sim.run(jobs, policy=StaticPolicy(prof.default_config))
     assert res.num_jobs == len(jobs)
-    # choosing an A100-only config id on an A30 must fail loudly
+    # choosing an A100-only config id on an A30 must fail loudly — at
+    # engine construction, with the policy named (not a bare KeyError
+    # deep inside the first _config lookup)
     sim2 = MIGSimulator(make_scheduler("EDF-SS"), config_table=prof.configs)
-    with pytest.raises(KeyError, match="device's table"):
+    with pytest.raises(ValueError, match="StaticPolicy.*not in this device's"):
         sim2.run(generate_jobs(SHORT, 2), policy=StaticPolicy(12))
 
 

@@ -122,28 +122,42 @@ def test_repartition_penalty_blocks_processing():
     assert res.repartitions == 1
 
 
-def test_repartition_preempts_all_running():
-    jobs = [
+class _SwitchAtSecondArrival:
+    """Switch cfg5 -> cfg2 when the third decision point opens (t=5)."""
+
+    initial_config = 5
+    n = 0
+
+    def decide(self, t, s):
+        self.n += 1
+        return 2 if self.n == 3 else None
+
+    def next_timer(self, t):
+        return None
+
+
+def _repartition_jobs():
+    return [
         Job(0, JobKind.TRAINING, 0.0, 30.0, 100.0, LINEAR),
         Job(1, JobKind.TRAINING, 0.0, 30.0, 100.0, LINEAR),
         Job(2, JobKind.INFERENCE, 5.0, 1.0, 50.0, LINEAR),
     ]
 
-    class SwitchAtSecondArrival:
-        initial_config = 5
-        n = 0
 
-        def decide(self, t, s):
-            self.n += 1
-            return 2 if self.n == 3 else None
-
-        def next_timer(self, t):
-            return None
-
-    sim = _sim()
-    res = sim.run(jobs, policy=SwitchAtSecondArrival())
+def test_drain_repartition_preempts_all_running():
+    sim = _sim(repartition_mode="drain")
+    res = sim.run(_repartition_jobs(), policy=_SwitchAtSecondArrival())
     assert res.repartitions == 1
     assert res.preemptions >= 2  # both running jobs kicked to queue
+
+
+def test_partial_repartition_spares_surviving_slice():
+    # cfg5 (3g@0 + 3g@4) -> cfg2 (4g@0 + 3g@4): the 3g@4 instance survives,
+    # so exactly one of the two running jobs is preempted by the switch
+    sim = _sim(repartition_mode="partial")
+    res = sim.run(_repartition_jobs(), policy=_SwitchAtSecondArrival())
+    assert res.repartitions == 1
+    assert res.preemptions == 1
 
 
 def test_daynight_policy_switches_at_boundaries():
