@@ -19,6 +19,16 @@ regression in simulator throughput fails the build instead of landing
 silently.  The floor is deliberately far below developer-laptop numbers —
 it catches order-of-magnitude regressions (accidental O(n²) rescheduling,
 event storms), not scheduler noise on shared runners.
+
+``--backend batched`` delegates every remaining flag to
+``scripts/bench_batched.py`` (the batched backend needs a different
+methodology — events/sec-*equivalent* against an oracle reference — and a
+different output file, ``artifacts/bench/batched_events.json``), so one
+entry point benches either backend:
+
+::
+
+    PYTHONPATH=src python scripts/bench_engine.py --backend batched --quick
 """
 
 from __future__ import annotations
@@ -93,6 +103,27 @@ def measure(load_scale: float = 0.1, seeds: int = 3, repeats: int = 3) -> dict:
 
 
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--backend" in argv:
+        i = argv.index("--backend")
+        backend = argv[i + 1] if i + 1 < len(argv) else "?"
+        rest = argv[:i] + argv[i + 2:]
+        if backend == "batched":
+            # separate module, separate flags/out path: see its docstring
+            import importlib.util
+
+            spec = importlib.util.spec_from_file_location(
+                "bench_batched",
+                os.path.join(os.path.dirname(__file__), "bench_batched.py"),
+            )
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            return mod.main(rest)
+        if backend != "oracle":
+            print(f"unknown --backend {backend!r} (oracle|batched)",
+                  file=sys.stderr)
+            return 2
+        argv = rest
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--load-scale", type=float, default=0.1)

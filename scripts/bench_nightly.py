@@ -42,6 +42,7 @@ import sys
 DEFAULT_OUT = "BENCH_nightly.json"
 DEFAULT_SWEEPS_DIR = os.path.join("artifacts", "sweeps")
 ENGINE_BENCH_PATH = os.path.join("artifacts", "bench", "engine_events.json")
+BATCHED_BENCH_PATH = os.path.join("artifacts", "bench", "batched_events.json")
 
 
 def _git_sha() -> str:
@@ -91,6 +92,18 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
             "events": bench.get("events"),
             "load_scale": bench.get("load_scale"),
         }
+    # the batched backend's record rides alongside (never inside) the
+    # engine_bench entry: per-backend keys keep the trajectory schema and
+    # the existing engine gate untouched (scripts/bench_batched.py)
+    if os.path.exists(BATCHED_BENCH_PATH):
+        with open(BATCHED_BENCH_PATH) as f:
+            bench = json.load(f)
+        entry["batched_bench"] = {
+            "events_equiv_per_sec": bench.get("events_equiv_per_sec"),
+            "ratio_vs_oracle": bench.get("ratio_vs_oracle"),
+            "headline_load_scale": bench.get("headline_load_scale"),
+            "dt_min": bench.get("dt_min"),
+        }
     return entry
 
 
@@ -132,29 +145,39 @@ GATE_WINDOW = 7
 
 
 def check_events_regression(
-    trajectory: list, entry: dict, ratio: float, window: int = GATE_WINDOW
+    trajectory: list,
+    entry: dict,
+    ratio: float,
+    window: int = GATE_WINDOW,
+    *,
+    key: str = "engine_bench",
+    field: str = "events_per_sec",
+    label: str = "ENGINE",
+    unit: str = "ev/s",
 ) -> "str | None":
-    """Trajectory-relative engine-throughput gate.
+    """Trajectory-relative throughput gate (per-backend via ``key``).
 
-    Compares ``entry``'s events/sec against the **best** of the ``window``
+    Compares ``entry[key][field]`` against the **best** of the ``window``
     most recent previous entries that recorded one; returns a failure
     message when this run fell below ``ratio`` of that reference (None =
-    pass, including when either side has no engine-bench record — a
-    missing measurement is not a regression).  Referencing a rolling max
-    rather than only the immediately previous entry keeps the gate from
-    self-ratcheting: a persistent regression (which is recorded in the
-    trajectory by design) keeps failing until throughput recovers or the
-    regressed level ages out of the window, and compounding
+    pass, including when either side has no such record — a missing
+    measurement is not a regression).  The defaults gate the oracle
+    engine's events/sec; ``key="batched_bench", field="events_equiv_per_
+    sec"`` gates the batched backend the same way.  Referencing a rolling
+    max rather than only the immediately previous entry keeps the gate
+    from self-ratcheting: a persistent regression (which is recorded in
+    the trajectory by design) keeps failing until throughput recovers or
+    the regressed level ages out of the window, and compounding
     slightly-under-ratio drift cannot slip through night after night.
     """
-    now = (entry.get("engine_bench") or {}).get("events_per_sec")
+    now = (entry.get(key) or {}).get(field)
     if now is None:
         return None
     recent = []
     for prev in reversed(trajectory):
         if prev is entry:
             continue
-        prev_eps = (prev.get("engine_bench") or {}).get("events_per_sec")
+        prev_eps = (prev.get(key) or {}).get(field)
         if prev_eps:
             recent.append((prev_eps, prev.get("date", "?")))
             if len(recent) >= window:
@@ -164,9 +187,9 @@ def check_events_regression(
     ref_eps, ref_date = max(recent)
     if now < ratio * ref_eps:
         return (
-            f"ENGINE THROUGHPUT REGRESSION: {now:.0f} ev/s is below "
+            f"{label} THROUGHPUT REGRESSION: {now:.0f} {unit} is below "
             f"{ratio:.0%} of the best of the last {len(recent)} measured "
-            f"trajectory entries ({ref_eps:.0f} ev/s on {ref_date})"
+            f"trajectory entries ({ref_eps:.0f} {unit} on {ref_date})"
         )
     return None
 
@@ -181,6 +204,11 @@ def main(argv=None) -> int:
         help="fail (exit 1) when engine events/sec fell below R x the "
              "previous trajectory entry's (the entry is still appended)",
     )
+    ap.add_argument(
+        "--gate-batched-ratio", type=float, default=None, metavar="R",
+        help="same trajectory-relative gate for the batched backend's "
+             "events/sec-equivalent (batched_bench entries)",
+    )
     args = ap.parse_args(argv)
 
     entry = collect_entry(args.sweeps_dir)
@@ -193,11 +221,20 @@ def main(argv=None) -> int:
     # the gate compares against history *before* this run is appended, and
     # runs under --dry-run too (read-only) so a local gate reproduction
     # does not silently pass
-    failure = (
-        check_events_regression(trajectory, entry, args.gate_events_ratio)
-        if args.gate_events_ratio is not None
-        else None
-    )
+    failures = []
+    if args.gate_events_ratio is not None:
+        failures.append(
+            check_events_regression(trajectory, entry, args.gate_events_ratio)
+        )
+    if args.gate_batched_ratio is not None:
+        failures.append(
+            check_events_regression(
+                trajectory, entry, args.gate_batched_ratio,
+                key="batched_bench", field="events_equiv_per_sec",
+                label="BATCHED", unit="ev_eq/s",
+            )
+        )
+    failures = [f for f in failures if f]
     if args.dry_run:
         print(json.dumps(entry, indent=2))
     else:
@@ -205,10 +242,11 @@ def main(argv=None) -> int:
         save_trajectory(args.out, trajectory)
         print(f"appended entry #{len(trajectory)} to {args.out} "
               f"({len(entry['grids'])} grids, {entry['total_wall_s']}s total)")
-    if failure:
+    if failures:
         # the regressed entry is recorded above (unless --dry-run) — the
         # history must show the dip the gate is complaining about
-        print(failure, file=sys.stderr)
+        for failure in failures:
+            print(failure, file=sys.stderr)
         return 1
     return 0
 

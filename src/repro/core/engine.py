@@ -26,6 +26,12 @@ let it run to completion.  This module extracts the loop into a
 step-wise execution share this code path and are bit-identical by
 construction (property-tested in ``tests/test_engine.py``).
 
+This engine is also the **bit-exact oracle** of the repo's two-backend
+contract (docs/BATCHED_SIM.md, DESIGN.md §8): the batched fixed-timestep
+backend (``repro.core.batched``) reproduces its aggregates within
+documented tolerances, and every semantics question — and every checked-in
+baseline — is settled here, never there.
+
 All numeric state (time advance, energy/tardiness integration, preemption
 accounting) stays on the :class:`~repro.core.simulator.MIGSimulator`; the
 engine owns only the event queue, the event versioning, and decision-point

@@ -40,6 +40,7 @@ __all__ = [
     "fleet_state_features",
     "RewardWeights",
     "RepartitionEnv",
+    "make_batched_env",
 ]
 
 # The paper uses m=3, chosen "based on an analysis of typical GPU loads in
@@ -288,3 +289,19 @@ class RepartitionEnv:
 
     def _obs(self) -> np.ndarray:
         return state_features(self.sim.t, self.sim, self.m)
+
+
+def make_batched_env(**kwargs):
+    """Vectorized counterpart of :class:`RepartitionEnv` (lazy import).
+
+    Returns a :class:`repro.core.batched.BatchedRepartitionEnv` sharing this
+    module's feature/reward contract (same ``M_JOBS``, bin tables and
+    :class:`RewardWeights`), but stepping ``B`` rollouts per call on the
+    batched backend — training scripts collect a whole experience batch per
+    decision interval.  Kwargs are forwarded verbatim; see the batched env
+    for the cadence/scheduler caveats, and keep using :class:`RepartitionEnv`
+    for per-event decisions or non-EDF-FS schedulers.
+    """
+    from repro.core.batched import BatchedRepartitionEnv
+
+    return BatchedRepartitionEnv(**kwargs)

@@ -184,20 +184,35 @@ def _base_cell(
     policy_kwargs: Optional[Mapping[str, Any]],
     mig_enabled: bool,
     repartition_mode: str,
+    backend: str = "oracle",
+    backend_kwargs: Optional[Mapping[str, Any]] = None,
 ) -> Cell:
-    """The fields every cell shares; workload/scenario keys are added on top."""
+    """The fields every cell shares; workload/scenario keys are added on top.
+
+    ``backend`` selects the simulation engine: ``"oracle"`` (the event-driven
+    :class:`MIGSimulator`, the default) adds *no* keys — existing cell hashes
+    and baselines are untouched — while ``"batched"`` stamps the cell with
+    ``backend`` plus its resolved ``backend_kwargs`` (``dt_min``), so oracle
+    and batched runs of the same physics never alias one cache entry.
+    """
     if repartition_mode not in REPARTITION_MODES:
         raise ValueError(
             f"unknown repartition_mode {repartition_mode!r}; "
             f"valid: {REPARTITION_MODES}"
         )
+    if backend not in ("oracle", "batched"):
+        raise ValueError(
+            f"unknown backend {backend!r}; valid: ('oracle', 'batched')"
+        )
+    if backend == "oracle" and backend_kwargs:
+        raise ValueError("backend_kwargs only apply to the batched backend")
     policy_kwargs = dict(policy_kwargs or {})
     # Policies that load weights from disk are only content-addressable if the
     # weights themselves enter the hash: a retrained checkpoint at the same
     # path must miss the cache, not silently serve stale results.
     if "params_path" in policy_kwargs:
         policy_kwargs["_params_digest"] = file_digest(policy_kwargs["params_path"])
-    return {
+    cell: Cell = {
         "experiment": experiment,
         "group": group,
         "scheduler": scheduler,
@@ -210,6 +225,16 @@ def _base_cell(
         # and replay under the legacy drain model (see run_cell)
         "repartition_mode": repartition_mode,
     }
+    if backend == "batched":
+        # resolved like workload defaults: the hash must capture the timestep
+        # the discretization ran at (jax-free import; see batched.__init__)
+        from repro.core.batched import DEFAULT_DT_MIN
+
+        kw = dict(backend_kwargs or {})
+        kw["dt_min"] = float(kw.get("dt_min", DEFAULT_DT_MIN))
+        cell["backend"] = "batched"
+        cell["backend_kwargs"] = kw
+    return cell
 
 
 def make_cell(
@@ -223,6 +248,8 @@ def make_cell(
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
     repartition_mode: str = "partial",
+    backend: str = "oracle",
+    backend_kwargs: Optional[Mapping[str, Any]] = None,
 ) -> Cell:
     """A single-GPU cell whose jobs come from a raw :class:`WorkloadSpec`."""
     cell = _base_cell(
@@ -234,6 +261,8 @@ def make_cell(
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
         repartition_mode=repartition_mode,
+        backend=backend,
+        backend_kwargs=backend_kwargs,
     )
     cell["workload"] = workload_to_dict(workload)
     return cell
@@ -251,6 +280,8 @@ def make_scenario_cell(
     policy_kwargs: Optional[Mapping[str, Any]] = None,
     mig_enabled: bool = True,
     repartition_mode: str = "partial",
+    backend: str = "oracle",
+    backend_kwargs: Optional[Mapping[str, Any]] = None,
 ) -> Cell:
     """A cell whose jobs come from a registered scenario, not a raw spec.
 
@@ -267,6 +298,8 @@ def make_scenario_cell(
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
         repartition_mode=repartition_mode,
+        backend=backend,
+        backend_kwargs=backend_kwargs,
     )
     cell["scenario"] = {
         "name": scenario,
@@ -438,8 +471,20 @@ def run_cell(
     unpicklable ad-hoc policies (e.g. a live DQN agent mid-training); such
     cells bypass the cache at the runner layer.  Cells with a ``fleet`` key
     run through :class:`repro.fleet.FleetSimulator` and report the fleet
-    aggregate in the standard result fields.
+    aggregate in the standard result fields.  Cells with ``backend ==
+    "batched"`` run through :mod:`repro.sweep.batched` (a one-cell batch
+    here; :func:`repro.sweep.runner.run_cells` groups them for real
+    vectorization).
     """
+    if cell.get("backend") == "batched":
+        if policy_factory is not None:
+            raise ValueError(
+                "ad-hoc policy_factory cells cannot run on the batched "
+                "backend (policies must compile; see repro.core.batched)"
+            )
+        from repro.sweep.batched import run_batched_cells
+
+        return run_batched_cells([cell])[0]
     if "fleet" in cell:
         return _run_fleet_cell(cell, policy_factory)
     jobs = cell_jobs(cell)

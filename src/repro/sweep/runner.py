@@ -113,6 +113,28 @@ def run_cells(
             f"[{name}] {len(cells)} cells: {cached_count} cached, "
             f"{len(pending)} to compute (workers={max(workers, 1)})"
         )
+    computed_count = len(pending)
+
+    # batched-backend cells never enter the worker pool: grouping seeds into
+    # one vectorized simulate_batch call *is* their parallelism, and keeping
+    # jax in the parent avoids paying its import in every spawned worker.
+    # (with an ad-hoc policy_factory they fall through to run_cell, which
+    # rejects the combination with a useful error.)
+    batched = [
+        i for i in pending if cells[i].get("backend") == "batched"
+    ] if policy_factory is None else []
+    if batched:
+        from repro.sweep.batched import run_batched_cells
+
+        if progress:
+            progress(f"[{name}] {len(batched)} batched cells run in-process")
+        for i, raw in zip(batched, run_batched_cells([cells[i] for i in batched])):
+            out = _strip_volatile(raw)
+            results[i] = out
+            if cache_obj is not None:
+                cache_obj.put(hashes[i], cells[i], out)
+        done_batched = set(batched)
+        pending = [i for i in pending if i not in done_batched]
 
     if pending:
         if policy_factory is not None or workers <= 1:
@@ -164,7 +186,7 @@ def run_cells(
                     "name": name,
                     "cells": len(cells),
                     "cached": cached_count,
-                    "computed": len(pending),
+                    "computed": computed_count,
                     "workers": workers,
                     "wall_s": wall_s,
                 },
@@ -180,7 +202,7 @@ def run_cells(
         hashes=hashes,
         results=results,  # type: ignore[arg-type]
         cached_count=cached_count,
-        computed_count=len(pending),
+        computed_count=computed_count,
         wall_s=wall_s,
         jsonl_path=jsonl_path,
     )
