@@ -59,6 +59,37 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def _serving_slo_summary(path: str) -> dict:
+    """Per-dispatcher SLO attainment (fleet-wide and per tenant) from the
+    ``serving_matrix`` JSONL artifact — the nightly time series that shows a
+    serving regression as *whose* SLOs degraded, not just a wall-clock blip.
+    """
+    per: dict = {}
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            disp = rec["cell"]["fleet"]["dispatcher"]
+            acc = per.setdefault(disp, {})
+            for name, st in (rec["result"].get("tenants") or {}).items():
+                a = acc.setdefault(name, [0, 0])
+                a[0] += int(st["jobs"])
+                a[1] += int(st["attained"])
+    out = {}
+    for disp, tenants in sorted(per.items()):
+        jobs = sum(v[0] for v in tenants.values())
+        attained = sum(v[1] for v in tenants.values())
+        out[disp] = {
+            "slo_attainment": round(attained / jobs, 4) if jobs else 1.0,
+            "tenants": {
+                n: round(v[1] / v[0], 4) if v[0] else 1.0
+                for n, v in sorted(tenants.items())
+            },
+        }
+    return out
+
+
 def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
     grids = {}
     for meta_path in sorted(glob.glob(os.path.join(sweeps_dir, "*.meta.json"))):
@@ -84,6 +115,9 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
         "grids": grids,
         "total_wall_s": round(sum(g["wall_s"] for g in grids.values()), 3),
     }
+    serving_path = os.path.join(sweeps_dir, "serving_matrix.jsonl")
+    if os.path.exists(serving_path):
+        entry["serving_slo"] = _serving_slo_summary(serving_path)
     if os.path.exists(ENGINE_BENCH_PATH):
         with open(ENGINE_BENCH_PATH) as f:
             bench = json.load(f)

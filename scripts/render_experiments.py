@@ -362,6 +362,7 @@ GRID_ANCHORS = {
     "scenario_matrix": "beyond-paper (scenarios)",
     "repartition_policies": "beyond-paper (§V-C conjecture)",
     "repartition_modes": "beyond-paper (partial vs full-drain reconfiguration)",
+    "serving_matrix": "beyond-paper (multi-tenant SLO serving, DESIGN.md §9)",
     "smoke": "CI smoke (Table II subset)",
 }
 
@@ -608,6 +609,62 @@ def predictive_md() -> str:
 
 
 # ----------------------------------------------------------------------
+# §Serving — multi-tenant SLO attainment under fragmentation-aware dispatch
+
+SERVING_BASELINE = os.path.join(
+    REPO_ROOT, "benchmarks", "baselines", "serving_matrix.jsonl"
+)
+
+
+def serving_md() -> str:
+    out = io.StringIO()
+    out.write("## Serving — multi-tenant SLO attainment\n\n")
+    out.write(
+        "The `multi-tenant-serving` scenario replaces the paper's anonymous\n"
+        "batch trace with named tenant request streams: each tenant is a\n"
+        "model config mapped memory-first onto a MIG slice class\n"
+        "(`repro.core.serving`, DESIGN.md §9), every request carries a\n"
+        "latency SLO, and per-tenant attainment is threaded exactly through\n"
+        "`SimResult` and the fleet aggregation.  The `serving_matrix` grid\n"
+        "races the dispatchers over three tenant mixes on two fleets; the\n"
+        "`fragmentation-aware` dispatcher adds a slice-class misfit term and\n"
+        "a post-placement fragmentation penalty over the free-slot geometry\n"
+        "to the state-aware start-delay proxy.\n\n"
+    )
+    if not os.path.exists(SERVING_BASELINE):
+        out.write("*(baseline `serving_matrix.jsonl` not yet generated)*\n")
+        return out.getvalue()
+
+    rows = _baseline_rows(SERVING_BASELINE, "serving_matrix")
+
+    out.write(
+        "Fleet SLO attainment (request-weighted; higher is better) and\n"
+        "energy per fleet × mix × dispatcher from the checked-in\n"
+        "`--scale 0.1` baseline:\n\n"
+    )
+    out.write("| fleet | mix (load) | dispatcher | SLO attainment | energy (Wh) | ET |\n")
+    out.write("|---|---|---|---|---|---|\n")
+    for row in rows:
+        out.write(
+            f"| {row['fleet']} | {row['mix']} ({row['load_scale']:g}) "
+            f"| {row['dispatcher']} | {row['slo_attainment']:.4f} "
+            f"| {row['energy_wh']:.0f} | {row['ET']:.4f} |\n"
+        )
+    out.write(
+        "\nOn the large-heavy mix fragmentation-aware beats least-loaded on\n"
+        "SLO attainment at lower energy on *both* fleets (the CI-gated\n"
+        "acceptance row, pinned in `tests/test_serving.py`): keeping a\n"
+        "wide instance placeable is exactly what the mixtral-class tenants\n"
+        "need.  The saturated mixed-fleet balanced row shows the limit —\n"
+        "when offered load exceeds what the fleet can serve within SLO, no\n"
+        "routing policy recovers it and blind round-robin's spreading\n"
+        "incidentally wins.  Regenerate with `python -m repro.sweep\n"
+        "serving_matrix --scale 0.1` and compare via `--check-baseline`.\n"
+    )
+    return out.getvalue()
+
+
+# ----------------------------------------------------------------------
 # document assembly + checks
 
 
@@ -623,6 +680,7 @@ def build_markdown() -> str:
         dispatchers_md(),
         repartition_modes_md(),
         predictive_md(),
+        serving_md(),
     ]
     return "\n".join(part.rstrip() + "\n" for part in parts)
 

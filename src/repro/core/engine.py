@@ -56,7 +56,8 @@ from typing import (
 )
 
 from repro.core.jobs import Job, JobKind
-from repro.core.metrics import SimResult
+from repro.core.metrics import SimResult, TenantSLOStats
+from repro.core.slices import free_slot_geometry
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import MIGSimulator, RepartitionPolicy
@@ -139,6 +140,15 @@ class SimSnapshot:
     tardiness_integral: float
     preemptions: int
     repartitions: int
+    #: free-slot geometry of the current partition (DESIGN.md §9): grid
+    #: cells no occupied slice covers, the widest instance the device's
+    #: table could still place there, and the fragmentation ratio
+    #: ``1 - max_placeable/free`` (0 when nothing is free).  Forecast-style
+    #: policies and the fragmentation-aware dispatcher read these instead
+    #: of recomputing placement from ``occupied_slices``.
+    free_slots: int = 0
+    max_placeable_slots: int = 0
+    fragmentation: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -556,6 +566,20 @@ class SimulationEngine:
             )
         m = max(len(sim.completed), 1)
         total_tard = sum(j.tardiness() for j in sim.completed)
+        tenant_acc: Dict[str, List[float]] = {}
+        for j in sim.completed:
+            if j.tenant is None:
+                continue
+            acc = tenant_acc.setdefault(j.tenant, [0, 0, 0.0])
+            acc[0] += 1
+            acc[1] += 1 if j.slo_attained() else 0
+            acc[2] += j.latency()
+        tenants = {
+            name: TenantSLOStats(
+                jobs=int(acc[0]), attained=int(acc[1]), latency_sum_min=acc[2]
+            )
+            for name, acc in sorted(tenant_acc.items())
+        }
         return SimResult(
             energy_wh=sim.energy_wh,
             avg_tardiness=total_tard / m,
@@ -570,6 +594,7 @@ class SimulationEngine:
                 "makespan_min": sim.t,
                 "tardiness_integral": sim.tardiness_integral,
             },
+            tenants=tenants,
         )
 
 
@@ -591,6 +616,13 @@ def snapshot_of(sim: "MIGSimulator") -> SimSnapshot:
         for jid, sl in sim.assignment.items()
     )
     repart_until = sim._repartitioning_until
+    occupied = tuple(sorted(set(sim.assignment.values())))
+    geometry = free_slot_geometry(
+        sim.partition,
+        occupied,
+        total_slots=sim.grid_slots,
+        slice_sizes=sim.slice_sizes,
+    )
     return SimSnapshot(
         t=sim.t,
         config_id=sim.partition.config_id,
@@ -601,7 +633,7 @@ def snapshot_of(sim: "MIGSimulator") -> SimSnapshot:
             max(repart_until - sim.t, 0.0) if repart_until is not None else 0.0
         ),
         stalled_slots=sim.stalled_slots,
-        occupied_slices=tuple(sorted(set(sim.assignment.values()))),
+        occupied_slices=occupied,
         jobs_in_system=n_inf + n_trn,
         active_jobs=len(sim.active),
         queue_depth=max(len(sim.active) - len(sim.assignment), 0),
@@ -618,4 +650,7 @@ def snapshot_of(sim: "MIGSimulator") -> SimSnapshot:
         tardiness_integral=sim.tardiness_integral,
         preemptions=sim.preemptions,
         repartitions=sim.repartitions,
+        free_slots=geometry.free_slots,
+        max_placeable_slots=geometry.max_placeable_slots,
+        fragmentation=geometry.fragmentation,
     )

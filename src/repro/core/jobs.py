@@ -121,6 +121,14 @@ class Job:
     elasticity: Elasticity
     speedup_no_mig: float = 1.0  # NoMIG benchmark: 1.06 for linear jobs
 
+    # --- serving metadata (multi-tenant SLO workloads; DESIGN.md §9) ----
+    # Batch jobs leave both None.  A serving request carries its tenant id
+    # and a latency SLO in minutes; the generator also sets
+    # ``deadline = arrival + slo_min`` so EDF-family schedulers order
+    # requests by SLO urgency without modification.
+    tenant: Optional[str] = None
+    slo_min: Optional[float] = None
+
     # --- mutable scheduling state -------------------------------------
     remaining: float = dataclasses.field(default=-1.0)
     completion: Optional[float] = None
@@ -168,6 +176,23 @@ class Job:
         if self.completion is None:
             return 0.0
         return max(self.completion - self.deadline, 0.0)
+
+    def latency(self) -> float:
+        """Arrival-to-completion latency in minutes (0 while incomplete)."""
+        if self.completion is None:
+            return 0.0
+        return max(self.completion - self.arrival, 0.0)
+
+    def slo_attained(self) -> bool:
+        """Whether a completed request met its latency SLO.
+
+        Jobs without an SLO trivially attain it; incomplete jobs do not.
+        """
+        if self.completion is None:
+            return False
+        if self.slo_min is None:
+            return True
+        return self.latency() <= self.slo_min + 1e-9
 
     def mean_duration_all_sizes(self) -> float:
         """Average remaining duration over the canonical slice sizes.

@@ -17,12 +17,78 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
 
-__all__ = ["SimResult", "et_scale_factor", "et_metric", "et_table"]
+__all__ = [
+    "SimResult",
+    "TenantSLOStats",
+    "merge_tenant_stats",
+    "slo_attainment",
+    "et_scale_factor",
+    "et_metric",
+    "et_table",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSLOStats:
+    """Per-tenant serving outcome: request count, SLO hits, latency mass.
+
+    ``latency_sum_min`` is the sum of arrival-to-completion latencies so
+    stats from different devices merge exactly (means do not).
+    """
+
+    jobs: int
+    attained: int
+    latency_sum_min: float
+
+    @property
+    def attainment(self) -> float:
+        """Fraction of requests that met their SLO (1.0 for zero requests)."""
+        if self.jobs == 0:
+            return 1.0
+        return self.attained / self.jobs
+
+    @property
+    def mean_latency_min(self) -> float:
+        if self.jobs == 0:
+            return 0.0
+        return self.latency_sum_min / self.jobs
+
+
+def merge_tenant_stats(
+    parts: Iterable[Mapping[str, TenantSLOStats]],
+) -> Dict[str, TenantSLOStats]:
+    """Merge per-device tenant stats into fleet totals (exact, order-free)."""
+    out: Dict[str, TenantSLOStats] = {}
+    for part in parts:
+        for tenant, st in part.items():
+            prev = out.get(tenant)
+            if prev is None:
+                out[tenant] = st
+            else:
+                out[tenant] = TenantSLOStats(
+                    jobs=prev.jobs + st.jobs,
+                    attained=prev.attained + st.attained,
+                    latency_sum_min=prev.latency_sum_min + st.latency_sum_min,
+                )
+    return out
+
+
+def slo_attainment(tenants: Mapping[str, TenantSLOStats]) -> float:
+    """Request-weighted SLO attainment across tenants (1.0 when empty)."""
+    jobs = sum(st.jobs for st in tenants.values())
+    if jobs == 0:
+        return 1.0
+    return sum(st.attained for st in tenants.values()) / jobs
 
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
-    """Outcome of one simulation run."""
+    """Outcome of one simulation run.
+
+    ``tenants`` is populated only by serving workloads whose jobs carry a
+    tenant id (DESIGN.md §9); batch simulations leave it empty, keeping
+    their serialized result dicts byte-identical to pre-serving baselines.
+    """
 
     energy_wh: float
     avg_tardiness: float
@@ -34,6 +100,12 @@ class SimResult:
     deadline_misses: int = 0
     busy_slot_minutes: float = 0.0  # integral of busy slots over time
     extra: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    tenants: Mapping[str, TenantSLOStats] = dataclasses.field(default_factory=dict)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Request-weighted SLO attainment over all tenants (1.0 if none)."""
+        return slo_attainment(self.tenants)
 
 
 def et_scale_factor(results: Iterable[SimResult]) -> float:

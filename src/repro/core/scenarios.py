@@ -295,3 +295,8 @@ def _weekend_flat(
 ) -> List[Job]:
     spec = WorkloadSpec(horizon_min=horizon_min, constant_rate=rate_per_min * load_scale)
     return generate_jobs(spec, seed)
+
+
+# registers "multi-tenant-serving" (latency-SLO tenant streams over the
+# model configs); imported last so the registry above exists when it runs
+import repro.core.serving  # noqa: E402,F401  (registration side effect)

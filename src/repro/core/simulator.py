@@ -38,7 +38,7 @@ from repro.core.jobs import Job
 from repro.core.metrics import SimResult
 from repro.core.power import A100_250W, PowerModel
 from repro.core.schedulers import Assignment, Scheduler, remap_assignment
-from repro.core.slices import MIG_CONFIGS, Partition, transition
+from repro.core.slices import MIG_CONFIGS, Partition, table_slice_sizes, transition
 
 __all__ = [
     "RepartitionPolicy",
@@ -194,6 +194,11 @@ class MIGSimulator:
         self.configs: Mapping[int, Partition] = (
             dict(config_table) if config_table is not None else MIG_CONFIGS
         )
+        # device slot-grid geometry, cached for snapshot fragmentation:
+        # the grid is as wide as the widest layout in the table, and the
+        # placeable vocabulary is whatever slice widths the table uses
+        self.grid_slots: int = max(p.total_slots for p in self.configs.values())
+        self.slice_sizes: Tuple[int, ...] = table_slice_sizes(dict(self.configs))
 
         # runtime state (reset per run)
         self.reset(min(self.configs))

@@ -38,6 +38,10 @@ __all__ = [
     "auto_starts",
     "transition",
     "validate_config_table",
+    "FreeSlotGeometry",
+    "free_slot_geometry",
+    "table_slice_sizes",
+    "fleet_fragmentation",
 ]
 
 TOTAL_SLOTS = 7
@@ -306,11 +310,140 @@ def transition(old: Partition, new: Partition) -> TransitionPlan:
     )
 
 
+# ----------------------------------------------------------------------
+# Free-slot geometry and the fragmentation ratio (DESIGN.md §9).
+#
+# A serving fleet cares not about *how many* slots are free but about the
+# largest instance the free region can still host: seven free slots split
+# 1+2+1+2+1 across placement holes cannot place a 4g slice.  Following the
+# fragmentation-aware MIG literature we measure this as a ratio in [0, 1]:
+# 0 when the free capacity is fully usable (or there is none), approaching
+# 1 as alignment holes shred it.
+
+
+@dataclasses.dataclass(frozen=True)
+class FreeSlotGeometry:
+    """The free region of a slot grid, as maximal contiguous runs.
+
+    A grid cell is *free* when no occupied slice covers it — cells of
+    unoccupied slice instances count as free (a repartition may rebuild
+    them), as do placement holes outside every slice (config 5's slot 3).
+
+    ``slice_sizes`` is the device's placeable instance vocabulary (an A30
+    has no 3g slice); it bounds :attr:`max_placeable_slots` and therefore
+    the fragmentation ratio.
+    """
+
+    total_slots: int
+    runs: Tuple[Tuple[int, int], ...]  # maximal free runs as (start, length)
+    slice_sizes: Tuple[int, ...] = ALL_SLICE_SIZES
+
+    @property
+    def free_slots(self) -> int:
+        """Total free grid cells (sum of run lengths)."""
+        return sum(length for _, length in self.runs)
+
+    def placeable_starts(self, slots: int) -> Tuple[int, ...]:
+        """Aligned start offsets where a ``slots``-wide instance fits."""
+        a = placement_alignment(slots)
+        out: List[int] = []
+        for start, length in self.runs:
+            s = ((start + a - 1) // a) * a
+            while s + slots <= start + length:
+                out.append(s)
+                s += a
+        return tuple(out)
+
+    @property
+    def max_placeable_slots(self) -> int:
+        """Largest placeable instance (0 when nothing fits anywhere)."""
+        best = 0
+        for slots in self.slice_sizes:
+            if slots > best and self.placeable_starts(slots):
+                best = slots
+        return best
+
+    @property
+    def fragmentation(self) -> float:
+        """``1 - max_placeable / free`` in [0, 1]; 0 when nothing is free.
+
+        0 means the free capacity is fully usable as one instance (an empty
+        or a fully-occupied device both score 0); it grows as placement
+        alignment shreds the free cells into runs too small or misaligned
+        for the larger slice classes.
+        """
+        free = self.free_slots
+        if free == 0:
+            return 0.0
+        return 1.0 - self.max_placeable_slots / free
+
+
+def table_slice_sizes(configs: Dict[int, Partition]) -> Tuple[int, ...]:
+    """Sorted distinct slice widths a device's partition table can place."""
+    return tuple(sorted({s.slots for p in configs.values() for s in p.slices}))
+
+
+def free_slot_geometry(
+    partition: Partition,
+    occupied_slices: Sequence[int],
+    *,
+    total_slots: int,
+    slice_sizes: Optional[Sequence[int]] = None,
+) -> FreeSlotGeometry:
+    """Free-slot geometry of ``partition`` with the given slices occupied.
+
+    ``occupied_slices`` are indices into ``partition.slices`` (an invalid
+    index raises).  Free cells are everything else on the ``total_slots``
+    grid: unoccupied slice instances and placement holes alike.
+    """
+    busy = set()
+    for i in occupied_slices:
+        if not 0 <= i < partition.num_slices:
+            raise IndexError(
+                f"occupied slice index {i} out of range for {partition}"
+            )
+        busy.update(partition.occupied_cells(i))
+    sizes = (
+        tuple(sorted(slice_sizes))
+        if slice_sizes is not None
+        else tuple(s for s in ALL_SLICE_SIZES if s <= total_slots)
+    )
+    runs: List[Tuple[int, int]] = []
+    run_start: Optional[int] = None
+    for cell in range(total_slots):
+        if cell in busy:
+            if run_start is not None:
+                runs.append((run_start, cell - run_start))
+                run_start = None
+        elif run_start is None:
+            run_start = cell
+    if run_start is not None:
+        runs.append((run_start, total_slots - run_start))
+    return FreeSlotGeometry(
+        total_slots=total_slots, runs=tuple(runs), slice_sizes=sizes
+    )
+
+
+def fleet_fragmentation(geometries: Sequence[FreeSlotGeometry]) -> float:
+    """Free-capacity-weighted fleet fragmentation ratio in [0, 1].
+
+    ``1 - sum(max placeable) / sum(free)`` over the fleet — equivalently
+    the per-device ratios weighted by each device's free slots, so a large
+    idle device dominates a shredded small one.  0 when nothing is free.
+    """
+    free = sum(g.free_slots for g in geometries)
+    if free == 0:
+        return 0.0
+    placeable = sum(g.max_placeable_slots for g in geometries)
+    return 1.0 - placeable / free
+
+
 def validate_config_table(
     configs: Dict[int, Partition],
     max_slots: int,
     max_memory_gb: int,
     max_1g10_slices: int | None = None,
+    name: str | None = None,
 ) -> None:
     """Sanity-check a device's partition table (invoked at import, cheap).
 
@@ -319,40 +452,46 @@ def validate_config_table(
     rule (:func:`placement_alignment`), slices stay inside the grid, and no
     two slices overlap — the preconditions the :func:`transition` instance
     matching relies on.
+
+    ``name`` identifies the device profile (or table) in every error so a
+    fleet-config failure points at the offending hardware entry, not just a
+    bare config id that is ambiguous across per-profile tables.
     """
+    where = f"{name} table, " if name else ""
     for cid, part in configs.items():
+        ctx = f"{where}config {cid}"
         if part.config_id != cid:
-            raise AssertionError(f"config id mismatch for {cid}")
+            raise AssertionError(f"{ctx}: config id mismatch ({part.config_id})")
         if part.total_slots > max_slots:
-            raise AssertionError(f"config {cid} exceeds {max_slots} slots")
+            raise AssertionError(f"{ctx} exceeds {max_slots} slots")
         if part.total_memory_gb > max_memory_gb:
-            raise AssertionError(f"config {cid} exceeds {max_memory_gb}GB")
+            raise AssertionError(f"{ctx} exceeds {max_memory_gb}GB")
         if max_1g10_slices is not None:
             n_1g10 = sum(1 for s in part.slices if s == S1_10)
             if n_1g10 > max_1g10_slices:
-                raise AssertionError(f"config {cid} has {n_1g10} 1g.10gb slices")
+                raise AssertionError(f"{ctx} has {n_1g10} 1g.10gb slices")
         occupied: set = set()
         for i, (start, s) in enumerate(zip(part.starts, part.slices)):
             if start % placement_alignment(s.slots) != 0:
                 raise AssertionError(
-                    f"config {cid} slice {i} ({s.name}) starts at {start}, "
+                    f"{ctx} slice {i} ({s.name}) starts at {start}, "
                     f"violating the {placement_alignment(s.slots)}-slot "
                     "placement alignment"
                 )
             cells = set(part.occupied_cells(i))
             if start < 0 or start + s.slots > max_slots:
                 raise AssertionError(
-                    f"config {cid} slice {i} ({s.name}@{start}) leaves the "
+                    f"{ctx} slice {i} ({s.name}@{start}) leaves the "
                     f"{max_slots}-slot grid"
                 )
             if occupied & cells:
                 raise AssertionError(
-                    f"config {cid} slice {i} ({s.name}@{start}) overlaps "
+                    f"{ctx} slice {i} ({s.name}@{start}) overlaps "
                     "another slice"
                 )
             occupied |= cells
 
 
 # A100 Fig. 1 table: at most one 1g.10gb slice per configuration (paper §III-A)
-validate_config_table(MIG_CONFIGS, TOTAL_SLOTS, 40, max_1g10_slices=1)
-validate_config_table(A30_CONFIGS, 4, 24)
+validate_config_table(MIG_CONFIGS, TOTAL_SLOTS, 40, max_1g10_slices=1, name="A100 Fig. 1")
+validate_config_table(A30_CONFIGS, 4, 24, name="A30")

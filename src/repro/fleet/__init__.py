@@ -17,9 +17,13 @@ from repro.fleet.devices import DEVICE_PROFILES, DeviceProfile, device_profile
 from repro.fleet.dispatch import (
     DISPATCHERS,
     DeviceLoadState,
+    DeviceState,
+    DispatchContext,
     Dispatcher,
     EngineDeviceState,
+    FragmentationAwareDispatcher,
     StateAwareDispatcher,
+    as_context_dispatcher,
     dispatch_jobs,
     make_dispatcher,
 )
@@ -40,9 +44,13 @@ __all__ = [
     "device_profile",
     "DISPATCHERS",
     "DeviceLoadState",
+    "DeviceState",
+    "DispatchContext",
     "Dispatcher",
     "EngineDeviceState",
+    "FragmentationAwareDispatcher",
     "StateAwareDispatcher",
+    "as_context_dispatcher",
     "dispatch_jobs",
     "make_dispatcher",
     "FleetDeviceSpec",

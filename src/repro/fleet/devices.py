@@ -15,7 +15,13 @@ import dataclasses
 from typing import Dict, Mapping, Tuple
 
 from repro.core.power import A100_250W, A30_165W, TPU_V5E_POD, PowerModel
-from repro.core.slices import A30_CONFIGS, MIG_CONFIGS, Partition
+from repro.core.slices import (
+    A30_CONFIGS,
+    MIG_CONFIGS,
+    Partition,
+    table_slice_sizes,
+    validate_config_table,
+)
 
 __all__ = ["DeviceProfile", "DEVICE_PROFILES", "device_profile"]
 
@@ -29,10 +35,31 @@ class DeviceProfile:
     configs: Mapping[int, Partition]
     default_config: int  # a sensible mixed layout valid for this table
 
+    def __post_init__(self) -> None:
+        # re-validates the table under this profile's name so a bad fleet
+        # config fails with "<profile> table, config N ..." (not the bare
+        # config id the table's import-time check reports)
+        validate_config_table(
+            dict(self.configs),
+            max_slots=self.total_slots,
+            max_memory_gb=max(p.total_memory_gb for p in self.configs.values()),
+            name=self.name,
+        )
+        if self.default_config not in self.configs:
+            raise AssertionError(
+                f"{self.name} table, default config {self.default_config} "
+                f"not in table ids {sorted(self.configs)}"
+            )
+
     @property
     def total_slots(self) -> int:
         """Peak parallel compute slots (the full-GPU partition size)."""
         return max(p.total_slots for p in self.configs.values())
+
+    @property
+    def slice_sizes(self) -> Tuple[int, ...]:
+        """Distinct slice widths this device can place (ascending)."""
+        return table_slice_sizes(dict(self.configs))
 
     def config_ids(self) -> Tuple[int, ...]:
         """Valid partition ids of this device's table, ascending."""

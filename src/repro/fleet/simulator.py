@@ -32,14 +32,16 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.engine import SimulationEngine
 from repro.core.jobs import Job
-from repro.core.metrics import SimResult
+from repro.core.metrics import SimResult, merge_tenant_stats
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import MIGSimulator, RepartitionPolicy
 from repro.core.slices import MIG_CONFIGS, Partition
 from repro.fleet.devices import DeviceProfile, device_profile
 from repro.fleet.dispatch import (
     DispatchTrace,
+    DispatchContext,
     EngineDeviceState,
+    as_context_dispatcher,
     dispatch_jobs,
     make_dispatcher,
 )
@@ -73,7 +75,12 @@ class FleetSpec:
 
     ``dispatch_info`` selects what the dispatcher observes: ``"online"``
     (default) co-advances per-device engines and exposes real state;
-    ``"fluid"`` is the legacy backlog-estimate pre-split.
+    ``"fluid"`` is the legacy backlog-estimate pre-split.  The toggle is
+    *deprecated as an API surface*: dispatchers no longer see it — both
+    modes hand them the same :class:`~repro.fleet.dispatch.DispatchContext`
+    (with ``ctx.online`` set accordingly) — and it survives only so that
+    existing sweep cells, which encode it under the ``fleet.info`` key,
+    keep hashing byte-identically.
     ``repartition_mode`` is applied to every device simulator — ``"partial"``
     (slot-placed transitions, the default) or ``"drain"`` (legacy full
     drain); see :class:`repro.core.simulator.MIGSimulator`.
@@ -203,6 +210,7 @@ def aggregate_sim_results(per_device: Sequence[SimResult]) -> SimResult:
                 r.extra.get("tardiness_integral", 0.0) for r in per_device
             ),
         },
+        tenants=merge_tenant_stats(r.tenants for r in per_device),
     )
 
 
@@ -298,7 +306,7 @@ class FleetSimulator:
     # ------------------------------------------------------------------
     def _run_online(self, jobs: Sequence[Job], policy_factory: PolicyFactory) -> FleetResult:
         """Co-advance one engine per device on the merged arrival clock."""
-        dispatcher = make_dispatcher(self.spec.dispatcher)
+        dispatcher = as_context_dispatcher(make_dispatcher(self.spec.dispatcher))
         engines: List[SimulationEngine] = []
         for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles)):
             sim = MIGSimulator(
@@ -339,7 +347,10 @@ class FleetSimulator:
             for engine, st in zip(engines, states):
                 engine.run_until(job.arrival, inclusive=False)
                 st.observe_at(job.arrival)
-            i = dispatcher.pick(job, job.arrival, states)
+            ctx = DispatchContext(
+                t=job.arrival, job=job, devices=states, online=True
+            )
+            i = dispatcher.pick(ctx)
             if not (0 <= i < len(states)):
                 raise IndexError(f"dispatcher {dispatcher.name} picked device {i}")
             engines[i].inject(job)

@@ -73,6 +73,11 @@ def validate_batched_cell(cell: Cell) -> None:
             f"batched backend implements only EDF-FS "
             f"(got {cell.get('scheduler')!r}); run this cell on the oracle"
         )
+    if (cell.get("scenario") or {}).get("name") == "multi-tenant-serving":
+        raise UnsupportedPolicyError(
+            "serving cells carry per-job tenant/SLO metadata the batched "
+            "state arrays do not represent; run them on the oracle backend"
+        )
 
 
 def _resolve_dt(cell: Cell) -> float:

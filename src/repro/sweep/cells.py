@@ -30,7 +30,7 @@ import json
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
-from repro.core.metrics import SimResult
+from repro.core.metrics import SimResult, TenantSLOStats
 from repro.core.scenarios import generate_scenario, resolve_scenario_kwargs
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import (
@@ -46,6 +46,7 @@ from repro.core.workload import WorkloadSpec, generate_jobs
 
 __all__ = [
     "POLICIES",
+    "CellSpec",
     "canonical_json",
     "cell_hash",
     "cell_jobs",
@@ -237,6 +238,94 @@ def _base_cell(
     return cell
 
 
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One declarative description of any sweep cell — the single build path.
+
+    Historically three keyword-sprawl constructors (``make_cell`` /
+    ``make_scenario_cell`` / ``make_fleet_cell``) each assembled cell dicts
+    with overlapping-but-divergent parameter lists.  ``CellSpec`` holds the
+    union once, validates the combinations, and :meth:`to_cell` emits the
+    dict with exactly the historical key-presence rules — so every
+    pre-existing cell hash is unchanged (pinned by
+    ``tests/test_sweep.py::test_cellspec_preserves_baseline_hashes``).  The
+    legacy constructors survive as thin wrappers.
+
+    Job stream: exactly one of ``workload`` (a raw :class:`WorkloadSpec`)
+    or ``scenario`` (a registered scenario name; ``scenario_kwargs`` are
+    resolved against its defaults into the cell).  Fleet cells
+    (``fleet_profiles`` set) require a scenario stream and a dispatcher;
+    ``dispatch_info`` enters the cell under the legacy ``fleet.info`` key.
+    """
+
+    experiment: str
+    group: str
+    scheduler: str
+    seed: int
+    # --- job stream (exactly one) -------------------------------------
+    workload: Optional[WorkloadSpec] = None
+    scenario: Optional[str] = None
+    scenario_kwargs: Optional[Mapping[str, Any]] = None
+    # --- policy + physics ---------------------------------------------
+    policy: str = "static"
+    policy_kwargs: Optional[Mapping[str, Any]] = None
+    mig_enabled: bool = True
+    repartition_mode: str = "partial"
+    # --- execution backend --------------------------------------------
+    backend: str = "oracle"
+    backend_kwargs: Optional[Mapping[str, Any]] = None
+    # --- fleet ----------------------------------------------------------
+    fleet_profiles: Optional[Sequence[str]] = None
+    dispatcher: Optional[str] = None
+    dispatch_info: str = "online"
+
+    def to_cell(self) -> Cell:
+        """Build the JSON cell dict (validates field combinations)."""
+        if (self.workload is None) == (self.scenario is None):
+            raise ValueError(
+                "CellSpec needs exactly one job stream: workload or scenario"
+            )
+        if self.scenario_kwargs is not None and self.scenario is None:
+            raise ValueError("scenario_kwargs require a scenario stream")
+        is_fleet = self.fleet_profiles is not None
+        if is_fleet and not self.fleet_profiles:
+            raise ValueError("fleet_profiles must name at least one device")
+        if is_fleet and self.scenario is None:
+            raise ValueError("fleet cells take a scenario stream, not a raw workload")
+        if is_fleet and self.dispatcher is None:
+            raise ValueError("fleet cells require a dispatcher")
+        if not is_fleet and self.dispatcher is not None:
+            raise ValueError("dispatcher only applies to fleet cells")
+        if is_fleet and self.backend != "oracle":
+            raise ValueError("fleet cells only run on the oracle backend")
+        cell = _base_cell(
+            experiment=self.experiment,
+            group=self.group,
+            scheduler=self.scheduler,
+            seed=self.seed,
+            policy=self.policy,
+            policy_kwargs=self.policy_kwargs,
+            mig_enabled=self.mig_enabled,
+            repartition_mode=self.repartition_mode,
+            backend=self.backend,
+            backend_kwargs=self.backend_kwargs,
+        )
+        if self.workload is not None:
+            cell["workload"] = workload_to_dict(self.workload)
+        else:
+            cell["scenario"] = {
+                "name": self.scenario,
+                "kwargs": resolve_scenario_kwargs(self.scenario, self.scenario_kwargs),
+            }
+        if is_fleet:
+            cell["fleet"] = {
+                "devices": [{"profile": p} for p in self.fleet_profiles],
+                "dispatcher": self.dispatcher,
+                "info": self.dispatch_info,
+            }
+        return cell
+
+
 def make_cell(
     *,
     experiment: str,
@@ -251,21 +340,23 @@ def make_cell(
     backend: str = "oracle",
     backend_kwargs: Optional[Mapping[str, Any]] = None,
 ) -> Cell:
-    """A single-GPU cell whose jobs come from a raw :class:`WorkloadSpec`."""
-    cell = _base_cell(
+    """A single-GPU cell whose jobs come from a raw :class:`WorkloadSpec`.
+
+    Thin wrapper over :class:`CellSpec` (the one build path).
+    """
+    return CellSpec(
         experiment=experiment,
         group=group,
         scheduler=scheduler,
         seed=seed,
+        workload=workload,
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
         repartition_mode=repartition_mode,
         backend=backend,
         backend_kwargs=backend_kwargs,
-    )
-    cell["workload"] = workload_to_dict(workload)
-    return cell
+    ).to_cell()
 
 
 def make_scenario_cell(
@@ -285,27 +376,25 @@ def make_scenario_cell(
 ) -> Cell:
     """A cell whose jobs come from a registered scenario, not a raw spec.
 
-    The scenario's knobs are resolved against its defaults into the cell —
-    the content hash must capture the values the generator saw, exactly as
-    ``workload_to_dict`` resolves :class:`WorkloadSpec` defaults.
+    Thin wrapper over :class:`CellSpec`; the scenario's knobs are resolved
+    against its defaults into the cell — the content hash must capture the
+    values the generator saw, exactly as ``workload_to_dict`` resolves
+    :class:`WorkloadSpec` defaults.
     """
-    cell = _base_cell(
+    return CellSpec(
         experiment=experiment,
         group=group,
         scheduler=scheduler,
         seed=seed,
+        scenario=scenario,
+        scenario_kwargs=scenario_kwargs,
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
         repartition_mode=repartition_mode,
         backend=backend,
         backend_kwargs=backend_kwargs,
-    )
-    cell["scenario"] = {
-        "name": scenario,
-        "kwargs": resolve_scenario_kwargs(scenario, scenario_kwargs),
-    }
-    return cell
+    ).to_cell()
 
 
 def make_fleet_cell(
@@ -326,7 +415,7 @@ def make_fleet_cell(
 ) -> Cell:
     """A fleet cell: N devices (by profile name) behind a dispatcher.
 
-    Builds on :func:`make_scenario_cell`; the extra ``fleet`` key routes
+    Thin wrapper over :class:`CellSpec`; the extra ``fleet`` key routes
     :func:`run_cell` through :class:`repro.fleet.FleetSimulator`.  Every
     device runs ``scheduler`` and an independent instance of the cell's
     repartitioning policy.  ``dispatch_info`` selects what the dispatcher
@@ -334,24 +423,21 @@ def make_fleet_cell(
     ``"fluid"`` (the legacy backlog-estimate pre-split); the resolved value
     always enters the cell so the content hash captures it.
     """
-    cell = make_scenario_cell(
+    return CellSpec(
         experiment=experiment,
         group=group,
         scheduler=scheduler,
-        scenario=scenario,
         seed=seed,
+        scenario=scenario,
         scenario_kwargs=scenario_kwargs,
         policy=policy,
         policy_kwargs=policy_kwargs,
         mig_enabled=mig_enabled,
         repartition_mode=repartition_mode,
-    )
-    cell["fleet"] = {
-        "devices": [{"profile": p} for p in profiles],
-        "dispatcher": dispatcher,
-        "info": dispatch_info,
-    }
-    return cell
+        fleet_profiles=tuple(profiles),
+        dispatcher=dispatcher,
+        dispatch_info=dispatch_info,
+    ).to_cell()
 
 
 def canonical_json(obj: Any) -> str:
@@ -383,13 +469,24 @@ def cell_jobs(cell: Cell) -> List[Any]:
     return generate_jobs(spec, seed=cell["seed"])
 
 
+def _tenants_dict(res: SimResult) -> Dict[str, Dict[str, Any]]:
+    return {
+        name: {
+            "jobs": st.jobs,
+            "attained": st.attained,
+            "latency_sum_min": st.latency_sum_min,
+        }
+        for name, st in sorted(res.tenants.items())
+    }
+
+
 def _result_dict(
     res: SimResult,
     util_histogram: Mapping[int, float],
     config_trace: Sequence[Any],
     t0: float,
 ) -> Dict[str, Any]:
-    return {
+    out = {
         "energy_wh": res.energy_wh,
         "avg_tardiness": res.avg_tardiness,
         "num_jobs": res.num_jobs,
@@ -405,6 +502,12 @@ def _result_dict(
         "config_trace": [[t, c] for t, c in config_trace],
         "elapsed_s": time.perf_counter() - t0,
     }
+    # only serving workloads emit tenant stats — batch cells keep the exact
+    # historical key set, so pre-serving baselines compare byte-identically
+    if res.tenants:
+        out["tenants"] = _tenants_dict(res)
+        out["slo_attainment"] = res.slo_attainment
+    return out
 
 
 def _run_fleet_cell(
@@ -448,16 +551,20 @@ def _run_fleet_cell(
             util[k] = util.get(k, 0.0) + v
     out = _result_dict(fres.aggregate, util, [], t0)
     out["dispatch_counts"] = list(fres.dispatch_counts)
-    out["devices"] = [
-        {
+    devices = []
+    for d, r in zip(f["devices"], fres.per_device):
+        entry = {
             "profile": d["profile"],
             "num_jobs": r.num_jobs,
             "energy_wh": r.energy_wh,
             "avg_tardiness": r.avg_tardiness,
             "repartitions": r.repartitions,
         }
-        for d, r in zip(f["devices"], fres.per_device)
-    ]
+        if r.tenants:  # serving cells: per-device SLO breakdown
+            entry["tenants"] = _tenants_dict(r)
+            entry["slo_attainment"] = r.slo_attainment
+        devices.append(entry)
+    out["devices"] = devices
     return out
 
 
@@ -516,9 +623,19 @@ _RESULT_FIELDS = (
 
 
 def result_to_sim_result(result: Mapping[str, Any]) -> SimResult:
-    """Reconstruct the :class:`SimResult` a cell's simulator run returned."""
+    """Reconstruct the :class:`SimResult` a cell's simulator run returned.
+
+    ``tenants`` is optional: pre-serving results (and every batch cell)
+    simply lack the key and round-trip with an empty mapping.
+    """
+    tenants = {
+        name: TenantSLOStats(**st)
+        for name, st in dict(result.get("tenants") or {}).items()
+    }
     return SimResult(
-        **{k: result[k] for k in _RESULT_FIELDS}, extra=dict(result["extra"])
+        **{k: result[k] for k in _RESULT_FIELDS},
+        extra=dict(result["extra"]),
+        tenants=tenants,
     )
 
 

@@ -738,6 +738,96 @@ def _repartition_modes_aggregate(
 
 
 # ----------------------------------------------------------------------
+# serving_matrix — multi-tenant SLO serving: fleets x dispatchers x mixes.
+# The serving acceptance row (fragmentation-aware beats least-loaded on
+# fleet SLO attainment at equal-or-better energy) lives in this grid's
+# checked-in baseline and is pinned by tests/test_serving.py.
+
+_SERVING_FLEETS: List[Tuple[str, List[str]]] = [
+    ("4xA100", ["a100-250w"] * 4),
+    ("2xA100+2xA30", ["a100-250w", "a100-250w", "a30-165w", "a30-165w"]),
+]
+#: energy-greedy is omitted: it is SLO-oblivious by design and saturates a
+#: packing target long before latency SLOs survive — the serving question
+#: is geometry vs load-only routing
+_SERVING_DISPATCHERS = (
+    "round-robin",
+    "least-loaded",
+    "state-aware",
+    "fragmentation-aware",
+)
+#: (mix, load_scale): day-average offered load tuned so the fleet runs hot
+#: enough that routing quality decides SLO attainment without saturating
+_SERVING_MIXES = (
+    ("balanced", 2.0),
+    ("small-heavy", 1.4),
+    ("large-heavy", 1.2),
+)
+
+
+def _serving_matrix_cells(scale: float) -> List[Cell]:
+    iters = _iters(2, scale)
+    cells: List[Cell] = []
+    for fname, profiles in _SERVING_FLEETS:
+        for mix, load in _SERVING_MIXES:
+            for disp in _SERVING_DISPATCHERS:
+                for k in range(iters):
+                    cells.append(
+                        make_fleet_cell(
+                            experiment="serving_matrix",
+                            group=f"{fname}:{mix}:{disp}",
+                            profiles=profiles,
+                            dispatcher=disp,
+                            scheduler="EDF-SS",
+                            scenario="multi-tenant-serving",
+                            scenario_kwargs={"mix": mix, "load_scale": load},
+                            seed=93_000 + k,
+                            policy="static",
+                            policy_kwargs={"config_id": 3},
+                        )
+                    )
+    return cells
+
+
+def _serving_matrix_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
+    from repro.core.metrics import merge_tenant_stats, slo_attainment
+
+    grouped = group_results(cells, results)
+    rows: Rows = []
+    for fname, _profiles in _SERVING_FLEETS:
+        for mix, load in _SERVING_MIXES:
+            # shared ET scale factor per (fleet, mix) across dispatchers
+            per = {
+                d: grouped[f"{fname}:{mix}:{d}"] for d in _SERVING_DISPATCHERS
+            }
+            t, a = et_table(per)
+            for disp in _SERVING_DISPATCHERS:
+                rs = per[disp]
+                tenants = merge_tenant_stats(r.tenants for r in rs)
+                rows.append(
+                    {
+                        "fleet": fname,
+                        "mix": mix,
+                        "load_scale": load,
+                        "dispatcher": disp,
+                        "slo_attainment": slo_attainment(tenants),
+                        "ET": t[disp],
+                        "et_a": a,
+                        "tenant_attainment": {
+                            name: st.attainment
+                            for name, st in sorted(tenants.items())
+                        },
+                        "tenant_mean_latency_min": {
+                            name: st.mean_latency_min
+                            for name, st in sorted(tenants.items())
+                        },
+                        **summarize_results(rs),
+                    }
+                )
+    return rows
+
+
+# ----------------------------------------------------------------------
 # smoke — a compact CI grid (subset of the Table II basket)
 
 
@@ -778,6 +868,7 @@ GRIDS: Dict[str, GridDef] = {
         GridDef("scenario_matrix", "Scenario library x the four schedulers", _scenario_matrix_cells, _scenario_matrix_aggregate),
         GridDef("repartition_policies", "Policy families x scenarios (incl. predictive controller)", _repartition_policies_cells, _repartition_policies_aggregate),
         GridDef("repartition_modes", "Drain vs partial reconfiguration per policy family x scenario", _repartition_modes_cells, _repartition_modes_aggregate),
+        GridDef("serving_matrix", "Multi-tenant SLO serving: fleets x dispatchers x tenant mixes", _serving_matrix_cells, _serving_matrix_aggregate),
         GridDef("smoke", "CI smoke grid: Table II subset", _smoke_cells, _table2_aggregate),
     ]
 }

@@ -18,6 +18,7 @@ from repro.core.workload import WorkloadSpec, generate_jobs
 from repro.fleet import (
     DEVICE_PROFILES,
     DISPATCHERS,
+    DispatchContext,
     FleetSimulator,
     FleetSpec,
     aggregate_sim_results,
@@ -117,7 +118,8 @@ def test_dispatch_requires_sorted_arrivals():
 
 def test_dispatcher_registry():
     assert set(DISPATCHERS) == {
-        "round-robin", "least-loaded", "energy-greedy", "state-aware"
+        "round-robin", "least-loaded", "energy-greedy", "state-aware",
+        "fragmentation-aware",
     }
     with pytest.raises(KeyError):
         make_dispatcher("clairvoyant")
@@ -200,7 +202,8 @@ def test_state_aware_avoids_repartitioning_device():
     engines[0].sim._start_repartition(6)
     states = [EngineDeviceState(i, p, e) for i, (p, e) in enumerate(zip(profiles, engines))]
     job = Job(99, JobKind.INFERENCE, 0.0, 1.0, 10.0, LINEAR)
-    pick = StateAwareDispatcher().pick(job, 0.0, states)
+    ctx = DispatchContext(t=0.0, job=job, devices=states)
+    pick = StateAwareDispatcher().pick(ctx)
     assert pick == 1
     assert states[0].repartition_remaining_min > 0.0
     assert states[1].repartition_remaining_min == 0.0
