@@ -43,6 +43,7 @@ DEFAULT_OUT = "BENCH_nightly.json"
 DEFAULT_SWEEPS_DIR = os.path.join("artifacts", "sweeps")
 ENGINE_BENCH_PATH = os.path.join("artifacts", "bench", "engine_events.json")
 BATCHED_BENCH_PATH = os.path.join("artifacts", "bench", "batched_events.json")
+SERVICE_BENCH_PATH = os.path.join("artifacts", "bench", "service_bench.json")
 
 
 def _git_sha() -> str:
@@ -137,6 +138,17 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
             "ratio_vs_oracle": bench.get("ratio_vs_oracle"),
             "headline_load_scale": bench.get("headline_load_scale"),
             "dt_min": bench.get("dt_min"),
+        }
+    # the scheduler-service load test (scripts/bench_service.py): end-to-end
+    # socket + WAL + engine submit throughput, gated like the backends
+    if os.path.exists(SERVICE_BENCH_PATH):
+        with open(SERVICE_BENCH_PATH) as f:
+            bench = json.load(f)
+        entry["service_throughput"] = {
+            "jobs_per_min": bench.get("jobs_per_min"),
+            "p50_ms": bench.get("p50_ms"),
+            "p99_ms": bench.get("p99_ms"),
+            "jobs": bench.get("jobs"),
         }
     return entry
 
@@ -243,6 +255,11 @@ def main(argv=None) -> int:
         help="same trajectory-relative gate for the batched backend's "
              "events/sec-equivalent (batched_bench entries)",
     )
+    ap.add_argument(
+        "--gate-service-ratio", type=float, default=None, metavar="R",
+        help="same trajectory-relative gate for the scheduler service's "
+             "submit throughput (service_throughput entries)",
+    )
     args = ap.parse_args(argv)
 
     entry = collect_entry(args.sweeps_dir)
@@ -266,6 +283,14 @@ def main(argv=None) -> int:
                 trajectory, entry, args.gate_batched_ratio,
                 key="batched_bench", field="events_equiv_per_sec",
                 label="BATCHED", unit="ev_eq/s",
+            )
+        )
+    if args.gate_service_ratio is not None:
+        failures.append(
+            check_events_regression(
+                trajectory, entry, args.gate_service_ratio,
+                key="service_throughput", field="jobs_per_min",
+                label="SERVICE", unit="jobs/min",
             )
         )
     failures = [f for f in failures if f]

@@ -1,0 +1,184 @@
+"""Load-test the scheduler service over its unix-socket front end.
+
+Spawns a real ``python -m repro.service serve`` process, drives it with a
+persistent :class:`~repro.service.ServiceClient`, and measures end-to-end
+submit throughput and latency — socket round-trip, WAL append, and the
+engine co-advance all included.  Arrivals are stamped by the client on a
+fixed sim-time grid sized so the device keeps up (completions interleave
+with submissions instead of piling into an ever-growing queue), which makes
+the run deterministic and the numbers comparable night over night.
+
+::
+
+    PYTHONPATH=src python scripts/bench_service.py                 # measure + write
+    PYTHONPATH=src python scripts/bench_service.py --quick --dry-run   # CI smoke
+    PYTHONPATH=src python scripts/bench_service.py \\
+        --min-jobs-per-min 5000 --max-p99-ms 50                    # nightly gate
+
+Writes ``artifacts/bench/service_bench.json`` (collected into the
+BENCH_nightly.json trajectory as the ``service_throughput`` key by
+``scripts/bench_nightly.py``).  The floors are the PR's acceptance numbers:
+sustained >= 5k jobs/min with p99 submit latency < 50 ms; like the engine
+floor they sit far below developer-machine numbers and catch
+order-of-magnitude regressions (per-op fsync on the default path, an
+accidental O(n²) in the submit path), not runner noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_OUT = os.path.join("artifacts", "bench", "service_bench.json")
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True, check=True
+            ).stdout.strip()
+        )
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def _percentile(sorted_vals, q):
+    return sorted_vals[min(int(q * (len(sorted_vals) - 1)), len(sorted_vals) - 1)]
+
+
+def measure(jobs: int, *, arrival_dt_min: float = 0.01, work: float = 0.05,
+            checkpoint_every_min: float = 30.0, warmup: int = 50) -> dict:
+    """Drive ``jobs`` submissions through a real server process.
+
+    ``work``/``arrival_dt_min`` set the offered load at ~5 slice-minutes per
+    sim-minute — under a 7-slice device's capacity, so the engine stays in
+    steady state and the measured latency is the service's, not a backlog
+    artifact.  The first ``warmup`` submissions prime the interpreter and
+    the socket and are excluded from the percentiles.
+    """
+    from repro.service import ServiceClient, wait_for_socket
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        src + os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else src
+    )
+
+    with tempfile.TemporaryDirectory(prefix="bench-service-") as td:
+        socket_path = os.path.join(td, "svc.sock")
+        proc = subprocess.Popen(
+            [
+                sys.executable, "-m", "repro.service", "serve",
+                "--dir", os.path.join(td, "state"), "--socket", socket_path,
+                "--speedup", "0",  # op-driven time: the client stamps arrivals
+                "--policy", "static:7", "--scheduler", "EDF-SS",
+                "--checkpoint-every-min", str(checkpoint_every_min),
+            ],
+            env=env,
+            stdout=subprocess.DEVNULL,
+            stderr=subprocess.STDOUT,
+        )
+        try:
+            wait_for_socket(socket_path, timeout_s=30.0)
+            client = ServiceClient(socket_path)
+            latencies = []
+            t_start = time.perf_counter()
+            for i in range(jobs):
+                t0 = time.perf_counter()
+                client.submit(
+                    job_id=i,
+                    arrival=i * arrival_dt_min,
+                    work=work,
+                    deadline_slack_min=60.0,
+                    elasticity="linear",
+                )
+                latencies.append(time.perf_counter() - t0)
+            elapsed = time.perf_counter() - t_start
+            status = client.status()
+            result = client.close_stream()
+            client.shutdown()
+            client.close()
+        finally:
+            try:
+                proc.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait()
+
+        if result["num_jobs"] != jobs:
+            raise RuntimeError(
+                f"service lost jobs: {result['num_jobs']} completed != "
+                f"{jobs} submitted"
+            )
+        lat = sorted(latencies[warmup:] or latencies)
+        return {
+            "date": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
+            "git_sha": _git_sha(),
+            "jobs": jobs,
+            "arrival_dt_min": arrival_dt_min,
+            "checkpoint_every_min": checkpoint_every_min,
+            "wall_s": round(elapsed, 4),
+            "jobs_per_min": round(jobs / elapsed * 60.0, 1),
+            "p50_ms": round(_percentile(lat, 0.50) * 1e3, 3),
+            "p95_ms": round(_percentile(lat, 0.95) * 1e3, 3),
+            "p99_ms": round(_percentile(lat, 0.99) * 1e3, 3),
+            "sim_minutes": round(status["t"], 2),
+            "energy_wh": result["energy_wh"],
+        }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--jobs", type=int, default=6000)
+    ap.add_argument("--quick", action="store_true",
+                    help="400 jobs — the CI smoke sizing")
+    ap.add_argument("--min-jobs-per-min", type=float, default=None,
+                    help="fail (exit 1) below this throughput — the gate")
+    ap.add_argument("--max-p99-ms", type=float, default=None,
+                    help="fail (exit 1) above this p99 submit latency")
+    ap.add_argument("--dry-run", action="store_true", help="print, don't write")
+    args = ap.parse_args(argv)
+
+    entry = measure(400 if args.quick else args.jobs)
+    print(json.dumps(entry, indent=2))
+    if not args.dry_run:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(entry, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+
+    failures = []
+    if (
+        args.min_jobs_per_min is not None
+        and entry["jobs_per_min"] < args.min_jobs_per_min
+    ):
+        failures.append(
+            f"SERVICE THROUGHPUT REGRESSION: {entry['jobs_per_min']:.0f} "
+            f"jobs/min < floor {args.min_jobs_per_min:.0f}"
+        )
+    if args.max_p99_ms is not None and entry["p99_ms"] > args.max_p99_ms:
+        failures.append(
+            f"SERVICE LATENCY REGRESSION: p99 {entry['p99_ms']:.2f} ms > "
+            f"ceiling {args.max_p99_ms:.2f} ms"
+        )
+    for failure in failures:
+        print(failure, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

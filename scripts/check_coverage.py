@@ -1,0 +1,89 @@
+"""Per-module coverage floors over a ``coverage json`` report.
+
+The blanket project percentage hides exactly the regressions that matter
+here: the engine and the service are the two modules whose behaviour is
+pinned by bit-identity guarantees, so *their* coverage must not erode even
+when the repo-wide number looks healthy.  CI runs the fast tier with
+``pytest --cov``, exports ``coverage.json``, and gates:
+
+::
+
+    python scripts/check_coverage.py coverage.json \\
+        --floor repro.core.engine=80 --floor repro.service=70
+
+A floor names either a single module (``repro.core.engine`` ->
+``src/repro/core/engine.py``) or a package prefix (``repro.service`` ->
+every file under ``src/repro/service/``); line coverage is aggregated as
+covered/statements over all matching files, and any floor with no matching
+measured files fails loudly (a renamed module must not silently skip its
+gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def module_percent(report: dict, module: str) -> "tuple[float, int]":
+    """Aggregate (percent, files) for a module/package dotted name."""
+    rel = module.replace(".", "/")
+    covered = statements = files = 0
+    for path, info in report.get("files", {}).items():
+        norm = path.replace("\\", "/")
+        for prefix in ("src/", ""):
+            mod_path = norm[len(prefix):] if norm.startswith(prefix) else None
+            if mod_path is None:
+                continue
+            if mod_path == rel + ".py" or mod_path.startswith(rel + "/"):
+                summary = info["summary"]
+                covered += int(summary["covered_lines"])
+                statements += int(summary["num_statements"])
+                files += 1
+            break
+    if statements == 0:
+        return 0.0, files
+    return 100.0 * covered / statements, files
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="coverage.json (from `coverage json`)")
+    ap.add_argument(
+        "--floor", action="append", default=[], metavar="MODULE=PCT",
+        help="e.g. repro.core.engine=80; repeatable",
+    )
+    args = ap.parse_args(argv)
+    if not args.floor:
+        ap.error("at least one --floor is required")
+
+    with open(args.report) as f:
+        report = json.load(f)
+
+    failures = []
+    for spec in args.floor:
+        module, _, pct = spec.partition("=")
+        if not pct:
+            ap.error(f"bad --floor {spec!r}; expected MODULE=PCT")
+        floor = float(pct)
+        got, files = module_percent(report, module)
+        if files == 0:
+            failures.append(
+                f"{module}: no measured files in {args.report} — was the "
+                f"module renamed, or --cov not pointed at it?"
+            )
+            continue
+        verdict = "ok" if got >= floor else "FAIL"
+        print(f"{module}: {got:.1f}% over {files} file(s), floor {floor:.0f}% [{verdict}]")
+        if got < floor:
+            failures.append(
+                f"{module}: coverage {got:.1f}% is below the {floor:.0f}% floor"
+            )
+    for failure in failures:
+        print(failure, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -247,6 +247,14 @@ class SimulationEngine:
         self._timer_scheduled: set = set()
         self.events_processed = 0
         self._awaiting: Optional[Tuple[EventKind, int, bool]] = None
+        # cancellation bookkeeping: ids cancelled before their arrival event
+        # popped (the pop loop skips those), and every id ever cancelled
+        self._cancelled_pending: set = set()
+        self._cancelled_ids: set = set()
+        # completed/cancelled jobs folded out by harvest_completed() — a
+        # long-running service keeps memory bounded this way; result() is
+        # the harvester's job once any jobs were folded out
+        self._harvested = 0
 
         self._jobs_by_id: Dict[int, Job] = {}
         self.arrivals_pending = 0
@@ -263,7 +271,12 @@ class SimulationEngine:
 
     def _register(self, job: Job) -> None:
         if job.job_id in self._jobs_by_id:
-            raise ValueError(f"job {job.job_id} already injected")
+            raise ValueError(
+                f"cannot inject job {job.job_id} at sim time t={self.sim.t}: "
+                f"that job id was already injected; submit each job under a "
+                f"unique id (resubmissions after a crash must reuse the old "
+                f"id only if the original was never acknowledged)"
+            )
         self._jobs_by_id[job.job_id] = job
         self.arrivals_pending += 1
         self._push(job.arrival, EventKind.ARRIVAL, job.job_id)
@@ -272,18 +285,131 @@ class SimulationEngine:
         """Feed one arrival into a running engine (online streaming).
 
         The arrival may not lie in the engine's past: events up to
-        ``job.arrival`` must not have been processed yet.
+        ``job.arrival`` must not have been processed yet.  Requires an open
+        stream — one-shot engines (constructed with a preloaded job list and
+        ``stream_open=False``) and engines whose producer already called
+        :meth:`close_stream` refuse injections.
         """
+        if not self.stream_open:
+            raise RuntimeError(
+                f"cannot inject job {job.job_id} at sim time t={self.sim.t}: "
+                f"the arrival stream is closed; construct the engine with "
+                f"stream_open=True and inject before close_stream()"
+            )
         if job.arrival < self.sim.t - 1e-6:
             raise ValueError(
-                f"cannot inject an arrival at t={job.arrival} into an engine "
-                f"already at t={self.sim.t}"
+                f"cannot inject job {job.job_id} with arrival t={job.arrival} "
+                f"into an engine already at sim time t={self.sim.t}: events up "
+                f"to its arrival were already processed; re-stamp the arrival "
+                f"to >= {self.sim.t} (a live service should stamp arrivals "
+                f"with max(client time, last advance bound))"
             )
         self._register(job)
 
     def close_stream(self) -> None:
         """Declare the online arrival stream finished (see ``stream_open``)."""
         self.stream_open = False
+
+    # ------------------------------------------------------------------
+    # cancellation and manual reconfiguration (the service layer's ops)
+
+    def cancel(self, job_id: int) -> str:
+        """Remove a job from the system (service ``cancel`` op).
+
+        Returns the disposition:
+
+        * ``"unarrived"`` — the arrival was still pending; it will never
+          enter the system (the queued ARRIVAL event is skipped on pop);
+        * ``"dequeued"`` — the job was waiting unassigned; removed;
+        * ``"preempted"`` — the job was running; it is preempted exactly like
+          any other preemption (device and job preemption counters charged)
+          and removed.  Energy/tardiness stop accruing from the current sim
+          time: energy because the slice leaves the busy set, tardiness
+          because the job leaves ``active`` (integration is exact up to
+          ``sim.t`` already — event pops advance time before mutations).
+
+        Unknown, completed, or already-cancelled job ids raise
+        :class:`ValueError` naming the sim time, the job id, and the remedy.
+        """
+        if self._awaiting is not None:
+            raise RuntimeError(
+                f"cannot cancel job {job_id} at t={self.sim.t}: an interactive "
+                "decision is pending; call provide_decision() first"
+            )
+        sim = self.sim
+        job = self._jobs_by_id.get(job_id)
+        if job is None or job_id in self._cancelled_ids:
+            state = "already cancelled" if job is not None else "never injected"
+            raise ValueError(
+                f"cannot cancel job {job_id} at sim time t={sim.t}: "
+                f"it was {state}; check `status` for the job's disposition "
+                f"before cancelling"
+            )
+        if job_id in sim.active:
+            was_running = job_id in sim.assignment
+            if was_running:
+                # the existing preemption path: a running job leaving the
+                # assignment counts once on the device and on the job
+                del sim.assignment[job_id]
+                sim.preemptions += 1
+                job.preemptions += 1
+            del sim.active[job_id]
+            disposition = "preempted" if was_running else "dequeued"
+        elif job.completion is not None:
+            raise ValueError(
+                f"cannot cancel job {job_id} at sim time t={sim.t}: it "
+                f"already completed at t={job.completion}; completed jobs "
+                f"cannot be cancelled"
+            )
+        else:
+            # arrival event still pending in the heap: mark it so the pop
+            # loop skips it without opening a decision point
+            self._cancelled_pending.add(job_id)
+            self.arrivals_pending -= 1
+            disposition = "unarrived"
+        self._cancelled_ids.add(job_id)
+        sim.cancelled.append(job)
+        if sim._repartitioning_until is None:
+            sim._reschedule()
+            sim._complete_finished()
+        # version-bump: a live completion/critical prediction may reference
+        # the cancelled job (or a seat freed by it)
+        self._push_followups()
+        return disposition
+
+    def reconfigure(self, config_id: int) -> bool:
+        """Start a repartition to ``config_id`` now (service ``reconfigure``).
+
+        The manual analogue of a policy decision: charges the same stall,
+        follows the active ``repartition_mode``.  Returns False (no-op) when
+        the device is already in that configuration.  Refuses while another
+        repartition is in flight.
+        """
+        if self._awaiting is not None:
+            raise RuntimeError(
+                f"cannot reconfigure at t={self.sim.t}: an interactive "
+                "decision is pending; call provide_decision() first"
+            )
+        sim = self.sim
+        if sim._repartitioning_until is not None:
+            raise RuntimeError(
+                f"cannot reconfigure to {config_id} at sim time t={sim.t}: a "
+                f"repartition to {sim._pending_config} is in flight until "
+                f"t={sim._repartitioning_until}; retry after it completes"
+            )
+        if config_id == sim.partition.config_id:
+            return False
+        if config_id not in sim.configs:
+            raise KeyError(
+                f"cannot reconfigure to config {config_id}: not in this "
+                f"device's table (valid ids {sorted(sim.configs)})"
+            )
+        sim._start_repartition(config_id)
+        self._push(sim._repartitioning_until, EventKind.REPART_DONE)
+        sim._reschedule()
+        sim._complete_finished()
+        self._push_followups()
+        return True
 
     # ------------------------------------------------------------------
     # follow-up event scheduling (identical semantics to the old run() loop)
@@ -431,6 +557,11 @@ class SimulationEngine:
             kind = EventKind(kind)
             if kind in (EventKind.COMPLETION, EventKind.CRITICAL) and ver != self._version:
                 continue  # stale prediction, superseded by a later version
+            if kind == EventKind.ARRIVAL and payload in self._cancelled_pending:
+                # cancelled before arrival: the event is dead — skip it
+                # without advancing time or opening a decision point
+                self._cancelled_pending.discard(payload)
+                continue
             break
 
         sim._advance(ev_t)
@@ -539,7 +670,110 @@ class SimulationEngine:
         return ev
 
     # ------------------------------------------------------------------
+    # state capture / restore (service checkpoints; docs/SERVICE.md)
+
+    def __getstate__(self) -> dict:
+        """Pickle support: the full engine state minus the live callables.
+
+        ``trace_sink`` and ``decision_hook`` are process-local observers, not
+        simulation state — they are dropped and must be reattached after
+        restore.  Everything else (heap, versions, the ``itertools.count``
+        sequence, simulator numerics, policy state) round-trips exactly:
+        a restored engine continues bit-identically to the original
+        (pinned by tests/test_service.py).
+        """
+        state = self.__dict__.copy()
+        state["trace_sink"] = None
+        state["decision_hook"] = None
+        return state
+
+    def to_snapshot_bytes(self) -> bytes:
+        """Serialize the engine (and its simulator/policy) for checkpointing.
+
+        Raises a clear error for unpicklable policies (e.g. a
+        :class:`CallbackPolicy` wrapping a closure): the service layer only
+        supports registry policies, which are all picklable.
+        """
+        import pickle
+
+        try:
+            return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception as e:
+            raise ValueError(
+                f"engine state is not picklable ({e}); checkpointing "
+                "requires a picklable policy/scheduler — CallbackPolicy "
+                "closures are not; use a registry policy "
+                "(repro.service.make_policy)"
+            ) from e
+
+    @classmethod
+    def from_snapshot_bytes(
+        cls,
+        blob: bytes,
+        *,
+        trace_sink: Optional[TraceSink] = None,
+        decision_hook: Optional[Callable[[float, "MIGSimulator"], None]] = None,
+    ) -> "SimulationEngine":
+        """Restore an engine from :meth:`to_snapshot_bytes` output.
+
+        The restored engine resumes mid-run, bit-identically — the recovery
+        contract the service's crash tests pin.  Observer callables are not
+        part of the snapshot; pass them here to reattach.
+        """
+        import pickle
+
+        engine = pickle.loads(blob)
+        if not isinstance(engine, cls):
+            raise ValueError(
+                f"snapshot blob holds a {type(engine).__name__}, "
+                f"not a {cls.__name__}"
+            )
+        engine.trace_sink = trace_sink
+        engine.decision_hook = decision_hook
+        return engine
+
+    def harvest_completed(self) -> Tuple[List[Job], List[Job]]:
+        """Remove and return (completed, cancelled) jobs accumulated so far.
+
+        A long-running service folds these into running aggregates
+        (:class:`repro.service.ServiceStats`) so memory stays bounded over
+        multi-day streams; the engine's own :meth:`result` becomes
+        unavailable once any jobs were folded out (it would silently
+        under-count) — the harvester owns the final result from then on.
+        """
+        sim = self.sim
+        done, cancelled = sim.completed, sim.cancelled
+        sim.completed, sim.cancelled = [], []
+        for job in done:
+            del self._jobs_by_id[job.job_id]
+        for job in cancelled:
+            del self._jobs_by_id[job.job_id]
+            self._cancelled_ids.discard(job.job_id)
+        self._harvested += len(done) + len(cancelled)
+        return done, cancelled
+
+    # ------------------------------------------------------------------
     # observation / results
+
+    def job_disposition(self, job_id: int) -> Optional[str]:
+        """Where a job currently is, or None if unknown (or harvested).
+
+        One of ``"pending"`` (arrival event still queued), ``"queued"``
+        (arrived, unassigned), ``"running"``, ``"completed"``, or
+        ``"cancelled"`` — the service's ``status`` op reads this.
+        """
+        job = self._jobs_by_id.get(job_id)
+        if job is None:
+            return None
+        if job_id in self._cancelled_ids:
+            return "cancelled"
+        if job_id in self.sim.assignment:
+            return "running"
+        if job_id in self.sim.active:
+            return "queued"
+        if job.completion is not None:
+            return "completed"
+        return "pending"
 
     def snapshot(self) -> EngineSnapshot:
         """Read-only view of device + queue state (see :class:`EngineSnapshot`)."""
@@ -558,6 +792,12 @@ class SimulationEngine:
             raise RuntimeError(
                 "simulation still has pending events (or an open stream); "
                 "close_stream() and drain() it first"
+            )
+        if self._harvested:
+            raise RuntimeError(
+                f"{self._harvested} jobs were folded out by "
+                "harvest_completed(); the harvester owns the final result "
+                "(repro.service.ServiceStats.result)"
             )
         sim = self.sim
         if sim.active:
@@ -580,6 +820,14 @@ class SimulationEngine:
             )
             for name, acc in sorted(tenant_acc.items())
         }
+        extra = {
+            "makespan_min": sim.t,
+            "tardiness_integral": sim.tardiness_integral,
+        }
+        # only runs with cancellations report them: batch baselines stay
+        # byte-identical (the key is absent, not zero)
+        if sim.cancelled:
+            extra["cancelled_jobs"] = float(len(sim.cancelled))
         return SimResult(
             energy_wh=sim.energy_wh,
             avg_tardiness=total_tard / m,
@@ -590,10 +838,7 @@ class SimulationEngine:
             max_tardiness=max((j.tardiness() for j in sim.completed), default=0.0),
             deadline_misses=sum(1 for j in sim.completed if j.tardiness() > 1e-9),
             busy_slot_minutes=sim.busy_slot_minutes,
-            extra={
-                "makespan_min": sim.t,
-                "tardiness_integral": sim.tardiness_integral,
-            },
+            extra=extra,
             tenants=tenants,
         )
 

@@ -32,6 +32,7 @@ __all__ = [
     "capped",
     "SUBLINEAR_CURVES",
     "sublinear",
+    "elasticity_from_label",
 ]
 
 
@@ -65,6 +66,17 @@ class Elasticity:
         if tp <= 0.0:
             return math.inf
         return work / tp
+
+    def __reduce__(self):
+        # the label is a complete description (every curve in the canonical
+        # vocabulary is label-addressable): pickling by label keeps Job —
+        # and hence the whole SimulationEngine — picklable for service
+        # checkpoints and WAL job records, despite the lambda in ``_tp``.
+        # Validate resolvability NOW so a custom curve (e.g. the cluster
+        # roofline elasticities) fails at dump time with a clear message,
+        # not at restore time with a corrupt checkpoint.
+        elasticity_from_label(self.label)
+        return (elasticity_from_label, (self.label,))
 
 
 LINEAR = Elasticity(ElasticityClass.LINEAR, "linear", lambda k: k)
@@ -103,6 +115,38 @@ SUBLINEAR_CURVES: Dict[str, Elasticity] = {
 
 def sublinear(label: str) -> Elasticity:
     return SUBLINEAR_CURVES[label]
+
+
+def elasticity_from_label(label: str) -> Elasticity:
+    """Resolve any canonical elasticity label back to its profile.
+
+    The inverse of ``Elasticity.label`` over the paper's whole vocabulary —
+    ``"linear"``, ``"capped@{2,3,4}g"``, and the four sublinear curve names.
+    This is the codec the pickle reduction and the service WAL job records
+    share: a label round-trips to an object with the identical throughput
+    function, so restored jobs deplete bit-identically.
+    """
+    if label == "linear":
+        return LINEAR
+    if label in SUBLINEAR_CURVES:
+        return SUBLINEAR_CURVES[label]
+    if label.startswith("capped@") and label.endswith("g"):
+        cap = int(label[len("capped@"):-1])
+        if cap in (2, 3, 4):
+            return capped(cap)
+        if cap >= 1:
+            # serving slice classes cap at 1 and 7 too (DESIGN.md §9) —
+            # same construction as repro.core.serving.class_elasticity
+            return Elasticity(
+                ElasticityClass.CAPPED,
+                f"capped@{cap}g",
+                lambda k, c=cap: min(k, float(c)),
+                cap=cap,
+            )
+    raise ValueError(
+        f"unknown elasticity label {label!r}; valid: 'linear', 'capped@<n>g' "
+        f"(n >= 1), or one of {sorted(SUBLINEAR_CURVES)}"
+    )
 
 
 @dataclasses.dataclass

@@ -214,6 +214,10 @@ class MIGSimulator:
         self.active: Dict[int, Job] = {}
         self.assignment: Assignment = {}
         self.completed: List[Job] = []
+        # jobs removed by SimulationEngine.cancel(): out of the system, never
+        # completed — they stop drawing energy/tardiness from the cancel
+        # instant and are reported via SimResult.extra["cancelled_jobs"]
+        self.cancelled: List[Job] = []
         self.energy_wh = 0.0
         self.tardiness_integral = 0.0
         self.preemptions = 0

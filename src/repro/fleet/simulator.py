@@ -51,6 +51,7 @@ __all__ = [
     "FleetDeviceSpec",
     "FleetSpec",
     "FleetResult",
+    "FleetStream",
     "FleetView",
     "FleetSimulator",
     "aggregate_sim_results",
@@ -304,77 +305,28 @@ class FleetSimulator:
         return self._run_online(jobs, policy_factory)
 
     # ------------------------------------------------------------------
+    def open_stream(self, policy_factory: PolicyFactory) -> "FleetStream":
+        """Open an incremental submission stream over this fleet.
+
+        The streaming core of online mode, exposed: the scheduler *service*
+        (``repro.service``) submits, cancels, and co-advances through the
+        returned :class:`FleetStream` one operation at a time, while
+        :meth:`run` remains the batch wrapper that feeds a whole job list
+        through the same code path (bit-identical by construction).
+        """
+        stream = FleetStream(self, policy_factory)
+        self.engines = stream.engines
+        self.sims = [e.sim for e in stream.engines]
+        self.view = stream.view
+        return stream
+
     def _run_online(self, jobs: Sequence[Job], policy_factory: PolicyFactory) -> FleetResult:
         """Co-advance one engine per device on the merged arrival clock."""
-        dispatcher = as_context_dispatcher(make_dispatcher(self.spec.dispatcher))
-        engines: List[SimulationEngine] = []
-        for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles)):
-            sim = MIGSimulator(
-                make_scheduler(dev.scheduler or self.spec.scheduler),
-                power_model=prof.power,
-                mig_enabled=self.mig_enabled,
-                config_table=prof.configs,
-                repartition_mode=self.spec.repartition_mode,
-            )
-            engines.append(
-                SimulationEngine(
-                    sim,
-                    policy=self._device_policy(i, prof, policy_factory),
-                    initial_config=dev.initial_config,
-                    stream_open=True,
-                )
-            )
-        self.engines = engines
-        self.sims = [e.sim for e in engines]
-        states = [
-            EngineDeviceState(i, prof, engine)
-            for i, (prof, engine) in enumerate(zip(self.profiles, engines))
-        ]
-        trace: DispatchTrace = []
-        self.view = FleetView(trace, self.profiles, engines=engines)
-
-        counts = [0] * len(engines)
-        prev_arrival = 0.0
+        stream = self.open_stream(policy_factory)
         for job in jobs:
-            if job.arrival < prev_arrival - 1e-9:
-                raise ValueError("fleet dispatch requires arrival-sorted jobs")
-            prev_arrival = job.arrival
-            # advance every device past all events before the arrival, then
-            # project each view to the arrival instant itself (a device's
-            # clock rests at its last event; between events state evolves
-            # linearly, so the projection is exact) — the dispatcher
-            # compares every device at the same simulated time t⁻
-            for engine, st in zip(engines, states):
-                engine.run_until(job.arrival, inclusive=False)
-                st.observe_at(job.arrival)
-            ctx = DispatchContext(
-                t=job.arrival, job=job, devices=states, online=True
-            )
-            i = dispatcher.pick(ctx)
-            if not (0 <= i < len(states)):
-                raise IndexError(f"dispatcher {dispatcher.name} picked device {i}")
-            engines[i].inject(job)
-            counts[i] += 1
-            states[i].dispatched += 1
-            # record the post-decision backlog: the injected arrival is not
-            # processed yet, so the routed job's work is added explicitly —
-            # same "backlog after each routing decision" contract as the
-            # fluid trace
-            trace.append(
-                (
-                    job.arrival,
-                    tuple(
-                        st.backlog_1g_min + (job.work if k == i else 0.0)
-                        for k, st in enumerate(states)
-                    ),
-                )
-            )
-        for engine in engines:
-            engine.close_stream()
-        for engine in engines:
-            engine.drain()
-        per_device = [engine.result() for engine in engines]
-        return self._finish(per_device, counts, trace)
+            stream.submit(job)
+        stream.close()
+        return stream.result()
 
     # ------------------------------------------------------------------
     def _run_fluid(self, jobs: Sequence[Job], policy_factory: PolicyFactory) -> FleetResult:
@@ -415,26 +367,165 @@ class FleetSimulator:
     def _finish(
         self, per_device: List[SimResult], counts: List[int], trace: DispatchTrace
     ) -> FleetResult:
-        aggregate = aggregate_sim_results(per_device)
-        if len(per_device) > 1:
-            # Per-device energy only covers [0, device makespan] (the single-GPU
-            # convention).  Devices the dispatcher starved still draw idle power
-            # until the fleet drains; report that separately so packing
-            # dispatchers aren't credited with turning idle silicon off.
-            fleet_makespan = aggregate.extra["makespan_min"]
-            idle_gap_wh = sum(
-                prof.power.idle_watts
-                * max(fleet_makespan - res.extra.get("makespan_min", 0.0), 0.0)
-                / 60.0
-                for prof, res in zip(self.profiles, per_device)
-            )
-            aggregate = dataclasses.replace(
-                aggregate,
-                extra={**aggregate.extra, "fleet_idle_gap_wh": idle_gap_wh},
-            )
-        return FleetResult(
-            aggregate=aggregate,
-            per_device=per_device,
-            dispatch_counts=counts,
-            trace=trace,
+        return _finish_result(self.profiles, per_device, counts, trace)
+
+
+def _finish_result(
+    profiles: Sequence[DeviceProfile],
+    per_device: List[SimResult],
+    counts: List[int],
+    trace: DispatchTrace,
+) -> FleetResult:
+    aggregate = aggregate_sim_results(per_device)
+    if len(per_device) > 1:
+        # Per-device energy only covers [0, device makespan] (the single-GPU
+        # convention).  Devices the dispatcher starved still draw idle power
+        # until the fleet drains; report that separately so packing
+        # dispatchers aren't credited with turning idle silicon off.
+        fleet_makespan = aggregate.extra["makespan_min"]
+        idle_gap_wh = sum(
+            prof.power.idle_watts
+            * max(fleet_makespan - res.extra.get("makespan_min", 0.0), 0.0)
+            / 60.0
+            for prof, res in zip(profiles, per_device)
         )
+        aggregate = dataclasses.replace(
+            aggregate,
+            extra={**aggregate.extra, "fleet_idle_gap_wh": idle_gap_wh},
+        )
+    return FleetResult(
+        aggregate=aggregate,
+        per_device=per_device,
+        dispatch_counts=counts,
+        trace=trace,
+    )
+
+
+class FleetStream:
+    """Incremental online-dispatch session over a fleet (one op at a time).
+
+    Built by :meth:`FleetSimulator.open_stream`.  Owns one stream-open
+    :class:`~repro.core.engine.SimulationEngine` per device plus the
+    dispatcher and the dispatch trace; :meth:`submit` performs exactly one
+    iteration of the batch loop (co-advance to the arrival, observe, pick,
+    inject), so a stream fed a whole sorted job list then closed is
+    bit-identical to :meth:`FleetSimulator.run` — pinned by
+    ``tests/test_service.py``.  The additions over the batch path:
+
+    * :meth:`cancel` routes a cancellation to the engine that owns the job
+      (the stream remembers every routing decision);
+    * :meth:`run_until` co-advances all engines to a bound with no arrival
+      (the service's idle tick);
+    * the whole object pickles (engines, dispatcher state, owner map, trace)
+      for service checkpoints, exactly like a single engine does.
+    """
+
+    def __init__(self, fleet: FleetSimulator, policy_factory: PolicyFactory) -> None:
+        spec = fleet.spec
+        self.dispatcher = as_context_dispatcher(make_dispatcher(spec.dispatcher))
+        self.profiles = fleet.profiles
+        engines: List[SimulationEngine] = []
+        for i, (dev, prof) in enumerate(zip(spec.devices, fleet.profiles)):
+            sim = MIGSimulator(
+                make_scheduler(dev.scheduler or spec.scheduler),
+                power_model=prof.power,
+                mig_enabled=fleet.mig_enabled,
+                config_table=prof.configs,
+                repartition_mode=spec.repartition_mode,
+            )
+            engines.append(
+                SimulationEngine(
+                    sim,
+                    policy=fleet._device_policy(i, prof, policy_factory),
+                    initial_config=dev.initial_config,
+                    stream_open=True,
+                )
+            )
+        self.engines = engines
+        self.states = [
+            EngineDeviceState(i, prof, engine)
+            for i, (prof, engine) in enumerate(zip(fleet.profiles, engines))
+        ]
+        self.trace: DispatchTrace = []
+        self.view = FleetView(self.trace, fleet.profiles, engines=engines)
+        self.counts = [0] * len(engines)
+        self.owner: "dict[int, int]" = {}  # job_id -> device index
+        self.closed = False
+        self._prev_arrival = 0.0
+
+    def submit(self, job: Job) -> int:
+        """Dispatch one arrival; returns the chosen device index."""
+        if self.closed:
+            raise RuntimeError(
+                f"cannot submit job {job.job_id}: the fleet stream is closed"
+            )
+        if job.arrival < self._prev_arrival - 1e-9:
+            raise ValueError("fleet dispatch requires arrival-sorted jobs")
+        self._prev_arrival = job.arrival
+        # advance every device past all events before the arrival, then
+        # project each view to the arrival instant itself (a device's
+        # clock rests at its last event; between events state evolves
+        # linearly, so the projection is exact) — the dispatcher
+        # compares every device at the same simulated time t⁻
+        for engine, st in zip(self.engines, self.states):
+            engine.run_until(job.arrival, inclusive=False)
+            st.observe_at(job.arrival)
+        ctx = DispatchContext(
+            t=job.arrival, job=job, devices=self.states, online=True
+        )
+        i = self.dispatcher.pick(ctx)
+        if not (0 <= i < len(self.states)):
+            raise IndexError(f"dispatcher {self.dispatcher.name} picked device {i}")
+        self.engines[i].inject(job)
+        self.counts[i] += 1
+        self.states[i].dispatched += 1
+        self.owner[job.job_id] = i
+        # record the post-decision backlog: the injected arrival is not
+        # processed yet, so the routed job's work is added explicitly —
+        # same "backlog after each routing decision" contract as the
+        # fluid trace
+        self.trace.append(
+            (
+                job.arrival,
+                tuple(
+                    st.backlog_1g_min + (job.work if k == i else 0.0)
+                    for k, st in enumerate(self.states)
+                ),
+            )
+        )
+        return i
+
+    def cancel(self, job_id: int) -> str:
+        """Cancel a previously submitted job on whichever device owns it."""
+        i = self.owner.get(job_id)
+        if i is None:
+            raise ValueError(
+                f"cannot cancel job {job_id}: it was never dispatched on "
+                f"this fleet stream; check `status` for its disposition"
+            )
+        return self.engines[i].cancel(job_id)
+
+    def run_until(self, t: float) -> int:
+        """Co-advance every engine up to (not through) ``t``; total events.
+
+        The same exclusive bound as the pre-arrival co-advance, so a tick at
+        ``t`` followed by a submit at ``t`` is indistinguishable from the
+        submit alone — ticks never perturb replay determinism.
+        """
+        self._prev_arrival = max(self._prev_arrival, t)
+        return sum(e.run_until(t, inclusive=False) for e in self.engines)
+
+    def close(self) -> None:
+        """End the stream and drain every device to completion."""
+        for engine in self.engines:
+            engine.close_stream()
+        for engine in self.engines:
+            engine.drain()
+        self.closed = True
+
+    def result(self) -> FleetResult:
+        """Aggregate results; only valid after :meth:`close`."""
+        if not self.closed:
+            raise RuntimeError("fleet stream still open; close() it first")
+        per_device = [engine.result() for engine in self.engines]
+        return _finish_result(self.profiles, per_device, self.counts, self.trace)

@@ -10,8 +10,8 @@ seeded pseudo-random draws) rather than being skipped wholesale.
 
 Only the API surface this suite uses is implemented: ``given``, ``settings``,
 and ``strategies.{integers, floats, sampled_from, lists, tuples, booleans,
-just}``.  Shrinking, the example database, and stateful testing are out of
-scope — install the real hypothesis for those.
+just, composite}``.  Shrinking, the example database, and stateful testing
+are out of scope — install the real hypothesis for those.
 """
 
 from __future__ import annotations
@@ -113,6 +113,34 @@ class _Just(_Strategy):
         return [self.value]
 
 
+class _Composite(_Strategy):
+    """A user function that builds one example via a ``draw`` callable."""
+
+    def __init__(self, fn, args, kwargs) -> None:
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def sample(self, rng):
+        return self.fn(
+            lambda strategy: strategy.sample(rng), *self.args, **self.kwargs
+        )
+
+    def boundary(self):
+        # composite examples have no well-defined edges; a fixed-seed draw
+        # keeps the boundary slot deterministic instead of empty (an empty
+        # boundary would disable *every* strategy's boundary pass in given())
+        return [self.sample(random.Random(0)), self.sample(random.Random(1))]
+
+
+def composite(fn):
+    """``@st.composite`` — the real API: ``fn(draw, *args) -> example``."""
+
+    @functools.wraps(fn)
+    def builder(*args: Any, **kwargs: Any) -> _Composite:
+        return _Composite(fn, args, kwargs)
+
+    return builder
+
+
 strategies = types.SimpleNamespace(
     integers=_Integers,
     floats=_Floats,
@@ -121,6 +149,7 @@ strategies = types.SimpleNamespace(
     tuples=_Tuples,
     booleans=lambda: _SampledFrom([False, True]),
     just=_Just,
+    composite=composite,
 )
 
 

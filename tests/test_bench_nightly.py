@@ -146,3 +146,51 @@ def test_main_appends_and_gates(tmp_path, monkeypatch, capsys):
         args + ["--gate-events-ratio", "0.5", "--dry-run"]
     ) == 1
     assert len(json.load(open(out))) == 3  # nothing appended
+
+# ----------------------------------------------------------------------
+# service_throughput trajectory key (scripts/bench_service.py)
+
+
+def _svc_entry(date, jpm=None):
+    e = {"date": date, "git_sha": "x", "sim_version": "t",
+         "grids": {"g": {"wall_s": 1.0}}, "total_wall_s": 1.0}
+    if jpm is not None:
+        e["service_throughput"] = {"jobs_per_min": jpm, "p99_ms": 1.0}
+    return e
+
+
+def test_gate_service_throughput_key():
+    hist = [_svc_entry("2026-08-01", jpm=400000.0)]
+    slow = _svc_entry("2026-08-02", jpm=150000.0)
+    bad = bench_nightly.check_events_regression(
+        hist, slow, 0.5, key="service_throughput", field="jobs_per_min",
+        label="SERVICE", unit="jobs/min",
+    )
+    assert bad is not None and "SERVICE" in bad and "jobs/min" in bad
+    ok = bench_nightly.check_events_regression(
+        hist, slow, 0.3, key="service_throughput", field="jobs_per_min",
+    )
+    assert ok is None
+    # entries without the key never gate (the bench may not have run)
+    assert bench_nightly.check_events_regression(
+        [_svc_entry("2026-08-01")], slow, 0.5,
+        key="service_throughput", field="jobs_per_min",
+    ) is None
+
+
+def test_collect_entry_picks_up_service_bench(tmp_path, monkeypatch):
+    sweeps = tmp_path / "sweeps"
+    sweeps.mkdir()
+    (sweeps / "g.meta.json").write_text(json.dumps(
+        {"name": "g", "cells": 2, "cached": 0, "computed": 2,
+         "workers": 1, "wall_s": 0.5}
+    ))
+    bench = tmp_path / "service_bench.json"
+    bench.write_text(json.dumps(
+        {"jobs_per_min": 123456.0, "p50_ms": 0.1, "p99_ms": 0.4, "jobs": 6000}
+    ))
+    monkeypatch.setattr(bench_nightly, "SERVICE_BENCH_PATH", str(bench))
+    entry = bench_nightly.collect_entry(str(sweeps))
+    assert entry["service_throughput"] == {
+        "jobs_per_min": 123456.0, "p50_ms": 0.1, "p99_ms": 0.4, "jobs": 6000,
+    }

@@ -1,0 +1,280 @@
+"""Crash recovery: snapshot + WAL-tail replay is bit-identical to no crash.
+
+The PR's headline guarantee, pinned three ways:
+
+* an in-process crash matrix — the service is killed (abandoned without
+  ``shutdown``) at randomized op indices, recovered, resumed, and the final
+  :class:`SimResult` must equal the uninterrupted run's, across two policies
+  × both repartition modes;
+* a real SIGKILL — ``python -m repro.service replay`` is killed mid-feed
+  from outside, then recovered in-process and resumed to the same result;
+* a slow-tier soak — a full accelerated diurnal day through the service
+  with bounded memory, bounded WAL, and a p99 submit-latency ceiling.
+"""
+
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+import zlib
+from pathlib import Path
+
+import pytest
+
+from repro.core.scenarios import generate_scenario
+from repro.service import SchedulerService, ServiceConfig, read_wal
+
+POLICIES = ("daynight", "heuristic")
+MODES = ("partial", "drain")
+
+
+def _script(seed, n=110, horizon_min=420.0):
+    """An op script: submissions with interleaved cancels and reconfigures."""
+    jobs = generate_scenario("trace-scaled", seed=seed, horizon_min=horizon_min)[:n]
+    ops = []
+    for k, job in enumerate(jobs):
+        ops.append(("submit", job))
+        if k % 17 == 11:
+            ops.append(("cancel", jobs[k - 3].job_id))
+        if k % 29 == 23:
+            ops.append(("reconfigure", 6 if (k // 29) % 2 == 0 else 2))
+    return ops
+
+
+def _drive(svc, ops):
+    for op in ops:
+        try:
+            if op[0] == "submit":
+                svc.submit(op[1])
+            elif op[0] == "cancel":
+                svc.cancel(op[1])
+            else:
+                svc.reconfigure(op[1])
+        except (ValueError, RuntimeError, KeyError):
+            # invalid ops (already-terminal cancel, repart in flight) are
+            # rejected *before* logging, so they never enter the WAL and
+            # are identical no-ops in every run
+            pass
+
+
+def _resume_ops(svc, ops):
+    """The ops a client would re-send after recovery: skip submissions the
+    service already knows (ack'd before the crash)."""
+    return [
+        op for op in ops
+        if not (op[0] == "submit" and op[1].job_id in svc.known_jobs)
+    ]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_crash_recovery_bit_identical(policy, mode, tmp_path):
+    cfg = ServiceConfig(
+        policy=policy, repartition_mode=mode, checkpoint_every_min=90.0
+    )
+    seed = zlib.crc32(f"{policy}/{mode}".encode())
+    ops = _script(seed % 16)
+
+    ref = SchedulerService(tmp_path / "ref", cfg)
+    _drive(ref, ops)
+    ref.close()
+    oracle = ref.result()
+    ref.shutdown()
+    assert oracle.num_jobs > 50
+
+    rng = random.Random(seed)
+    cuts = sorted(rng.sample(range(1, len(ops)), 3))
+    for ci, cut in enumerate(cuts):
+        d = tmp_path / f"crash{ci}"
+        victim = SchedulerService(d, cfg)
+        _drive(victim, ops[:cut])
+        del victim  # crash: no shutdown, no final checkpoint
+
+        svc = SchedulerService(d)  # recover from header+snapshot+WAL tail
+        # every op before the cut was acked, so a synchronous client
+        # resumes at ops[cut:]; submit dedup guards the ack boundary
+        _drive(svc, _resume_ops(svc, ops[cut:]))
+        svc.close()
+        assert svc.result() == oracle, (policy, mode, cut)
+        svc.shutdown()
+
+
+def test_recovery_replays_only_the_wal_tail(tmp_path):
+    """Ops before a checkpoint come back from the snapshot, not the WAL."""
+    cfg = ServiceConfig(policy="daynight", checkpoint_every_min=0.0)
+    ops = _script(2, n=60)
+    k = len(ops) // 2
+
+    d = tmp_path / "svc"
+    svc = SchedulerService(d, cfg)
+    _drive(svc, ops[:k])
+    svc.checkpoint()
+    assert read_wal(d / "wal.jsonl") == []  # rotated: all ops snapshotted
+    _drive(svc, ops[k:])
+    tail = len(read_wal(d / "wal.jsonl"))
+    assert tail > 0
+    del svc
+
+    svc2 = SchedulerService(d)
+    assert svc2.recovered_ops == tail  # only the tail replayed
+    svc2.close()
+    oracle_dir = tmp_path / "ref"
+    ref = SchedulerService(oracle_dir, cfg)
+    _drive(ref, _script(2, n=60))
+    ref.close()
+    assert svc2.result() == ref.result()
+    ref.shutdown()
+    svc2.shutdown()
+
+
+def test_recovery_tolerates_torn_wal_tail(tmp_path):
+    """A crash mid-append leaves a truncated last line; the unacked op is
+    dropped and the service recovers to the state of every *acked* op."""
+    cfg = ServiceConfig(policy="static", checkpoint_every_min=0.0)
+    ops = _script(4, n=40)
+    d = tmp_path / "svc"
+    svc = SchedulerService(d, cfg)
+    _drive(svc, ops)
+    del svc
+
+    wal_path = d / "wal.jsonl"
+    full = wal_path.read_bytes()
+    wal_path.write_bytes(full[: len(full) - 17])  # tear the final record
+
+    svc2 = SchedulerService(d)
+    acked = len(read_wal(wal_path))
+    assert svc2.recovered_ops == acked
+
+    # a reference run of just the acked prefix agrees exactly
+    ref = SchedulerService(tmp_path / "ref", cfg)
+    _drive(ref, _replayable(ops)[:acked])
+    svc2.close()
+    ref.close()
+    assert svc2.result() == ref.result()
+    svc2.shutdown()
+    ref.shutdown()
+
+
+def _replayable(ops):
+    """The subsequence of ops that actually commit (mirrors _drive's
+    swallow-invalid behaviour by simulating against a scratch service)."""
+    # ops that raise never reach the WAL; run them through a scratch
+    # service to learn which ones committed
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        svc = SchedulerService(
+            Path(td), ServiceConfig(policy="static", checkpoint_every_min=0.0)
+        )
+        kept = []
+        for op in ops:
+            before = svc.applied_seq
+            _drive(svc, [op])
+            if svc.applied_seq > before:
+                kept.append(op)
+        svc.wal.close()
+    return kept
+
+
+def _wait_for_wal_lines(path, n, timeout_s=30.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if path.exists() and sum(1 for _ in open(path)) >= n:
+            return True
+        time.sleep(0.02)
+    return False
+
+
+def test_sigkill_mid_replay_recovers_bit_identical(tmp_path):
+    """Kill a real service process with SIGKILL mid-stream; recovery must
+    reproduce the uninterrupted run's result bit-for-bit."""
+    n_jobs = 200
+    cfg = ServiceConfig(policy="daynight", checkpoint_every_min=60.0)
+
+    # oracle: the same feed, uninterrupted (in-process for speed; the
+    # replay CLI's defaults construct exactly this config)
+    ref = SchedulerService(tmp_path / "ref", cfg)
+    for job in generate_scenario("trace-scaled", seed=3)[:n_jobs]:
+        ref.submit(job)
+    ref.close()
+    oracle = ref.result()
+    ref.shutdown()
+
+    d = tmp_path / "victim"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.service", "replay",
+            "--dir", str(d), "--scenario", "trace-scaled", "--seed", "3",
+            "--max-jobs", str(n_jobs), "--pace-ms", "4",
+            "--policy", "daynight", "--checkpoint-every-min", "60",
+        ],
+        env=env,
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+    )
+    try:
+        # wait until the WAL proves we are mid-stream, then SIGKILL
+        assert _wait_for_wal_lines(d / "wal.jsonl", 25), "service never started feeding"
+        proc.send_signal(signal.SIGKILL)
+    finally:
+        proc.wait(timeout=30)
+
+    svc = SchedulerService.recover(d)
+    assert 0 < len(svc.known_jobs) < n_jobs  # genuinely mid-stream
+    for job in generate_scenario("trace-scaled", seed=3)[:n_jobs]:
+        if job.job_id not in svc.known_jobs:
+            svc.submit(job)
+    svc.close()
+    assert svc.result() == oracle
+    svc.shutdown()
+
+
+@pytest.mark.slow
+def test_service_soak_full_day_bounded(tmp_path):
+    """Accelerated full diurnal day: memory, WAL size, and submit latency
+    all stay bounded while checkpoints truncate the log."""
+    import resource
+
+    jobs = generate_scenario("trace-scaled", seed=0)  # full ~24 h day
+    svc = SchedulerService(
+        tmp_path / "soak",
+        ServiceConfig(policy="daynight", checkpoint_every_min=120.0),
+    )
+    latencies = []
+    max_wal = 0
+    rss_mid = None
+    for i, job in enumerate(jobs):
+        t0 = time.perf_counter()
+        svc.submit(job)
+        latencies.append(time.perf_counter() - t0)
+        max_wal = max(max_wal, svc.wal.size_bytes())
+        if i == len(jobs) // 2:
+            rss_mid = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    rss_end = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is KB on linux; second-half growth must stay small because
+    # checkpointing folds completed jobs out of the engine
+    assert rss_end - rss_mid < 200_000, (rss_mid, rss_end)
+
+    # WAL is truncated at every checkpoint: it never accumulates the day
+    assert max_wal < 1_000_000, max_wal
+    svc.checkpoint()
+    assert svc.wal.size_bytes() == 0
+    assert len(list((tmp_path / "soak").glob("ckpt-*.pkl"))) <= 2
+
+    # engine population is bounded by in-flight jobs, not history
+    assert len(svc.backend.sim.completed) == 0
+
+    lat = sorted(latencies)
+    p99 = lat[int(0.99 * (len(lat) - 1))]
+    assert p99 < 0.05, f"p99 submit latency {p99 * 1e3:.2f} ms"
+
+    svc.close()
+    res = svc.result()
+    assert res.num_jobs + int(res.extra.get("cancelled_jobs", 0)) == len(jobs)
+    svc.shutdown()
