@@ -2,9 +2,12 @@
 then run Table III (Dynamic vs DayNight vs Static vs NoMIG).
 
     PYTHONPATH=src python examples/dynamic_repartitioning_day.py \
-        [--episodes 400] [--eval-iterations 20]
+        [--episodes 400] [--eval-iterations 20] [--backend host|batched]
 
 Short trainings underperform; EXPERIMENTS.md used 900+ episodes.
+``--backend batched`` trains with the fused on-device scan
+(repro.core.rl.batched_train): EDF-FS, fixed 15-min decision cadence,
+orders of magnitude more env-steps/sec (scripts/bench_rl.py measures it).
 """
 
 import argparse
@@ -22,6 +25,7 @@ def main() -> None:
     ap.add_argument("--episodes", type=int, default=400)
     ap.add_argument("--eval-iterations", type=int, default=20)
     ap.add_argument("--save", default=None)
+    ap.add_argument("--backend", choices=("host", "batched"), default="host")
     args = ap.parse_args()
 
     cfg = DQNConfig(
@@ -31,13 +35,26 @@ def main() -> None:
         lr=3e-4,
         target_sync_every=2000,
     )
-    learner, stats = train_dqn(
-        num_episodes=args.episodes,
-        dqn_config=cfg,
-        verbose=True,
-        guide=queue_heuristic_policy(),
-        guide_episodes=max(args.episodes // 10, 10),
-    )
+    if args.backend == "batched":
+        learner, stats = train_dqn(
+            num_episodes=args.episodes,
+            dqn_config=cfg,
+            verbose=True,
+            backend="batched",
+            scheduler_name="EDF-FS",
+        )
+        print(
+            f"batched training: {stats.env_steps} env steps in "
+            f"{stats.wall_seconds:.1f}s ({stats.env_steps_per_sec:.0f}/s)"
+        )
+    else:
+        learner, stats = train_dqn(
+            num_episodes=args.episodes,
+            dqn_config=cfg,
+            verbose=True,
+            guide=queue_heuristic_policy(),
+            guide_episodes=max(args.episodes // 10, 10),
+        )
     if args.save:
         learner.save(args.save)
 
@@ -51,8 +68,15 @@ def main() -> None:
         "DayNightMIG": evaluate_policy(
             DayNightPolicy, num_iterations=args.eval_iterations
         ),
+        # cadence-trained policies evaluate on the same 15-min cadence
         "DynamicMIG(DQN)": evaluate_policy(
-            lambda: greedy_policy(learner), num_iterations=args.eval_iterations
+            lambda: greedy_policy(
+                learner,
+                decision_interval_min=(
+                    15.0 if args.backend == "batched" else None
+                ),
+            ),
+            num_iterations=args.eval_iterations,
         ),
     }
     table, a = et_table(per)

@@ -44,6 +44,7 @@ DEFAULT_SWEEPS_DIR = os.path.join("artifacts", "sweeps")
 ENGINE_BENCH_PATH = os.path.join("artifacts", "bench", "engine_events.json")
 BATCHED_BENCH_PATH = os.path.join("artifacts", "bench", "batched_events.json")
 SERVICE_BENCH_PATH = os.path.join("artifacts", "bench", "service_bench.json")
+RL_BENCH_PATH = os.path.join("artifacts", "bench", "rl_bench.json")
 
 
 def _git_sha() -> str:
@@ -149,6 +150,18 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
             "p50_ms": bench.get("p50_ms"),
             "p99_ms": bench.get("p99_ms"),
             "jobs": bench.get("jobs"),
+        }
+    # RL training throughput (scripts/bench_rl.py): batched trainer
+    # env-steps/sec at the headline curve point, plus the batched/host
+    # ratio and the host-oracle agreement verdict
+    if os.path.exists(RL_BENCH_PATH):
+        with open(RL_BENCH_PATH) as f:
+            bench = json.load(f)
+        entry["rl_throughput"] = {
+            "env_steps_per_sec": bench.get("env_steps_per_sec_batched"),
+            "ratio_vs_host": bench.get("ratio_vs_host"),
+            "headline_load_scale": bench.get("headline_load_scale"),
+            "agreement_ok": (bench.get("agreement") or {}).get("within_tolerance"),
         }
     return entry
 
@@ -260,6 +273,11 @@ def main(argv=None) -> int:
         help="same trajectory-relative gate for the scheduler service's "
              "submit throughput (service_throughput entries)",
     )
+    ap.add_argument(
+        "--gate-rl-ratio", type=float, default=None, metavar="R",
+        help="same trajectory-relative gate for the batched RL trainer's "
+             "env-steps/sec (rl_throughput entries)",
+    )
     args = ap.parse_args(argv)
 
     entry = collect_entry(args.sweeps_dir)
@@ -291,6 +309,14 @@ def main(argv=None) -> int:
                 trajectory, entry, args.gate_service_ratio,
                 key="service_throughput", field="jobs_per_min",
                 label="SERVICE", unit="jobs/min",
+            )
+        )
+    if args.gate_rl_ratio is not None:
+        failures.append(
+            check_events_regression(
+                trajectory, entry, args.gate_rl_ratio,
+                key="rl_throughput", field="env_steps_per_sec",
+                label="RL TRAIN", unit="steps/s",
             )
         )
     failures = [f for f in failures if f]

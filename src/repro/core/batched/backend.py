@@ -46,6 +46,7 @@ __all__ = [
     "RolloutState",
     "device_constants",
     "init_state",
+    "make_step_fn",
     "run_steps",
     "simulate_batch",
     "result_of",
@@ -157,12 +158,17 @@ def init_state(jobs: BatchedJobs, initial_idx: np.ndarray) -> RolloutState:
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_fn(kind: str, dt: float, n_steps: int, penalty: float,
-              day_start: float, day_end: float):
-    """Build (and cache) the jitted scan over ``n_steps`` for one policy kind."""
-    import jax
+def make_step_fn(kind: str, dt: float, penalty: float,
+                 day_start: float, day_end: float):
+    """Build (and cache) the per-(rollout, step) physics function.
+
+    This is the single source of the batched step semantics: both the
+    simulation chunk below and the fused RL training scan
+    (:mod:`repro.core.rl.batched_train`) vmap exactly this function, so an
+    agent trains against the very physics its rollouts are evaluated on.
+    The cache key mirrors :func:`_chunk_fn` minus the step count.
+    """
     import jax.numpy as jnp
-    from jax import lax
 
     def step_one(carry, t, arrival, deadline, rates, valid, dorder,
                  primary, secondary,
@@ -359,6 +365,19 @@ def _chunk_fn(kind: str, dt: float, n_steps: int, penalty: float,
             remaining, completion, slice_job, cfg, pending, stall_left,
             stop_time, energy, tard, busy_min, pre, rep, hist,
         )
+
+    return step_one
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_fn(kind: str, dt: float, n_steps: int, penalty: float,
+              day_start: float, day_end: float):
+    """Build (and cache) the jitted scan over ``n_steps`` for one policy kind."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    step_one = make_step_fn(kind, dt, penalty, day_start, day_end)
 
     @jax.jit
     def run_chunk(state, arrival, deadline, rates, valid, dorder,

@@ -71,18 +71,23 @@ class BatchedJobs:
         max_slots: int,
         mig_enabled: bool = True,
         pad_multiple: int = PAD_MULTIPLE,
+        min_jobs: int = 1,
     ) -> "BatchedJobs":
         """Pad ``B`` ragged job lists into one rectangular container.
 
         Jobs must be fresh (``remaining == work``); the batched backend owns
         depletion state internally.  ``max_slots`` sizes the rate table's
-        slot axis (use ``DeviceTables.max_slots``).
+        slot axis (use ``DeviceTables.max_slots``).  ``min_jobs`` floors the
+        padded job axis — callers that run many batches through one compiled
+        program (the RL trainer's round loop) pass the global maximum so
+        every round shares one shape.
         """
         B = len(job_lists)
         if B == 0:
             raise ValueError("empty batch")
         longest = max((len(js) for js in job_lists), default=0)
-        J = max(pad_multiple, -(-max(longest, 1) // pad_multiple) * pad_multiple)
+        want = max(longest, int(min_jobs), 1)
+        J = max(pad_multiple, -(-want // pad_multiple) * pad_multiple)
         K = max_slots + 1
 
         arrival = np.full((B, J), np.inf, dtype=np.float32)

@@ -481,6 +481,16 @@ class SimulationEngine:
         return self._awaiting is not None
 
     @property
+    def awaiting_timer(self) -> bool:
+        """True when the pending interactive decision point is a TIMER.
+
+        Cadence-driven callers (``RepartitionEnv(decision_interval_min=...)``)
+        use this to distinguish the policy-clock pauses they act on from the
+        arrival/completion decision points they pass through.
+        """
+        return self._awaiting is not None and bool(self._awaiting[2])
+
+    @property
     def finished(self) -> bool:
         """True when no events remain, none are pending, and none can come.
 

@@ -9,6 +9,11 @@ from repro.core.rl.env import (
 )
 from repro.core.rl.agent import DQNAgent, NStepAccumulator, greedy_policy
 from repro.core.rl.train import train_dqn, evaluate_policy
+from repro.core.rl.batched_train import (
+    BatchedTrainConfig,
+    BatchedTrainStats,
+    train_dqn_batched,
+)
 
 __all__ = [
     "DQNConfig",
@@ -23,4 +28,7 @@ __all__ = [
     "greedy_policy",
     "train_dqn",
     "evaluate_policy",
+    "BatchedTrainConfig",
+    "BatchedTrainStats",
+    "train_dqn_batched",
 ]

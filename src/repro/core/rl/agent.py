@@ -67,7 +67,16 @@ class NStepAccumulator:
 
 
 class DQNAgent:
-    """Training-mode policy: epsilon-greedy actions + replay collection."""
+    """Training-mode policy: epsilon-greedy actions + replay collection.
+
+    ``decision_interval_min`` puts the agent on a fixed decision cadence:
+    it acts only at (or at the first event past) multiples of the interval
+    and holds the configuration in between — the decision distribution the
+    fused batched trainer (:mod:`repro.core.rl.batched_train`) trains
+    under, so cadence-trained policies evaluate on the oracle engine under
+    matching semantics.  ``next_timer`` schedules the marks, so the engine
+    creates a decision point at each one even when the system idles.
+    """
 
     def __init__(
         self,
@@ -77,13 +86,18 @@ class DQNAgent:
         train: bool = True,
         train_steps_per_decision: int = 1,
         guide=None,  # optional policy whose actions warm-start the replay
+        decision_interval_min: Optional[float] = None,
     ) -> None:
+        if decision_interval_min is not None and decision_interval_min <= 0:
+            raise ValueError("decision_interval_min must be positive")
         self.learner = learner
         self.rewards = rewards
         self.initial_config = initial_config
         self.train = train
         self.train_steps = train_steps_per_decision
         self.guide = guide
+        self.decision_interval_min = decision_interval_min
+        self._next_mark = 0.0
         self.use_guide = False
         self.epsilon = 0.0
         self._prev_state: Optional[np.ndarray] = None
@@ -98,6 +112,7 @@ class DQNAgent:
     # -- episode lifecycle -------------------------------------------------
     def begin_episode(self, epsilon: float) -> None:
         self.epsilon = epsilon
+        self._next_mark = 0.0
         self._prev_state = None
         self._prev_action = None
         self._prev_energy = 0.0
@@ -124,6 +139,11 @@ class DQNAgent:
 
     # -- RepartitionPolicy protocol -----------------------------------------
     def decide(self, t: float, sim: "MIGSimulator") -> Optional[int]:
+        if self.decision_interval_min is not None:
+            if t < self._next_mark - 1e-9:
+                return None  # off-cadence event: hold, no bookkeeping
+            interval = self.decision_interval_min
+            self._next_mark = (np.floor(t / interval + 1e-9) + 1.0) * interval
         state = state_features(t, sim)
         if self._prev_state is not None:
             r = self._interval_reward(sim)
@@ -150,7 +170,10 @@ class DQNAgent:
         return None
 
     def next_timer(self, t: float) -> Optional[float]:
-        return None
+        if self.decision_interval_min is None:
+            return None
+        interval = self.decision_interval_min
+        return (np.floor(t / interval + 1e-9) + 1.0) * interval
 
     # -- reward bookkeeping --------------------------------------------------
     def _interval_reward(self, sim: "MIGSimulator") -> float:
@@ -163,8 +186,21 @@ class DQNAgent:
         return r
 
 
-def greedy_policy(learner: DQNLearner, initial_config: int = 2) -> DQNAgent:
-    """Evaluation-mode agent: greedy, no replay writes, no training."""
-    agent = DQNAgent(learner, train=False, initial_config=initial_config)
+def greedy_policy(
+    learner: DQNLearner,
+    initial_config: int = 2,
+    decision_interval_min: Optional[float] = None,
+) -> DQNAgent:
+    """Evaluation-mode agent: greedy, no replay writes, no training.
+
+    ``decision_interval_min`` evaluates on the fixed cadence the batched
+    trainer trained under (see :class:`DQNAgent`).
+    """
+    agent = DQNAgent(
+        learner,
+        train=False,
+        initial_config=initial_config,
+        decision_interval_min=decision_interval_min,
+    )
     agent.begin_episode(epsilon=0.0)
     return agent

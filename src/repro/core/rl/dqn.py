@@ -1,24 +1,40 @@
 """Deep Q-Network in pure JAX (paper §IV-D).
 
 Epsilon-greedy exploration, experience-replay buffer, target network, Huber
-TD loss, Adam — no external NN library.  The Q-network is a small MLP over
-the ``2+2m`` binned state features; the action space is the 12 MIG
-configurations of Fig. 1.
+TD loss — no external NN library.  The Q-network is a small MLP over the
+``2+2m`` binned state features; the action space is the 12 MIG
+configurations of Fig. 1.  The optimizer is the repo's own
+:class:`repro.optim.adamw.AdamW` configured down to classic Adam
+(``weight_decay=0``, no clipping, ``b2=0.999``) so the host loop and the
+fused on-device trainer (:mod:`repro.core.rl.batched_train`) share one
+update rule — :func:`make_td_update` is that shared jit-compatible step.
+
+Epsilon has two equivalent parameterizations: the host loop's per-episode
+linear decay (``eps_decay_episodes``, unchanged semantics) and the
+global-env-step decay (``eps_decay_steps``) that vectorized training needs —
+B parallel rollouts advance B env steps per decision, so an episode-indexed
+schedule would decay B× too fast.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.slices import NUM_CONFIGS
+from repro.optim.adamw import AdamW, AdamWConfig
 
-__all__ = ["DQNConfig", "ReplayBuffer", "DQNLearner"]
+__all__ = [
+    "DQNConfig",
+    "ReplayBuffer",
+    "DQNLearner",
+    "make_td_update",
+    "epsilon_by_step",
+]
 
 Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
 
@@ -39,6 +55,9 @@ class DQNConfig:
     eps_start: float = 1.0
     eps_end: float = 0.05
     eps_decay_episodes: int = 150
+    # global-env-step epsilon decay for vectorized training (None = unset;
+    # the host loop keeps its per-episode schedule either way)
+    eps_decay_steps: Optional[int] = None
     seed: int = 0
 
 
@@ -95,25 +114,72 @@ class ReplayBuffer:
         )
 
 
-# --------------------------- Adam (self-contained) -------------------------
+# ------------------------ shared TD update step ----------------------------
 
 
-def _adam_init(params: Params) -> Dict[str, Any]:
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
-    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+def make_optimizer(cfg: DQNConfig, lr=None) -> AdamW:
+    """The DQN optimizer: :class:`repro.optim.adamw.AdamW` as classic Adam.
+
+    ``weight_decay=0`` / no clipping / ``b2=0.999`` reproduce the previous
+    hand-rolled Adam bit-for-bit (same bias-corrected update); ``lr`` may be
+    a schedule callable (step -> lr), defaulting to the constant
+    ``cfg.lr`` the host loop uses.
+    """
+    return AdamW(AdamWConfig(
+        lr=cfg.lr if lr is None else lr,
+        b1=0.9, b2=0.999, eps=1e-8,
+        weight_decay=0.0, grad_clip_norm=None,
+    ))
 
 
-def _adam_update(params: Params, grads: Params, state: Dict[str, Any], lr: float,
-                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
-    t = state["t"] + 1
-    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
-    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
-    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
-    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
-    new_params = jax.tree_util.tree_map(
-        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
-    )
-    return new_params, {"m": m, "v": v, "t": t}
+def make_td_update(cfg: DQNConfig, lr=None):
+    """Build ``(optimizer, update_fn)`` — the one double-DQN training step.
+
+    ``update_fn(params, target, opt_state, s, a, r, s2, done, g)`` returns
+    ``(new_params, new_opt_state, loss)`` and is pure/jit-compatible: the
+    host :class:`DQNLearner` jits it directly and the fused batched trainer
+    calls it inside its rollout scan, so the two loops agree on an identical
+    replay batch to float tolerance by construction (the contract
+    DESIGN.md §11 states and tests/test_batched_train.py pins).
+    """
+    delta = cfg.huber_delta
+    opt = make_optimizer(cfg, lr)
+
+    def update(params, target, opt_state, s, a, r, s2, done, g):
+        def loss_fn(p):
+            q = q_forward(p, s)
+            q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+            # Double DQN: online net picks the argmax, target net evaluates
+            a2 = jnp.argmax(q_forward(p, s2), axis=1)
+            q_next = jnp.take_along_axis(
+                q_forward(target, s2), a2[:, None], axis=1
+            )[:, 0]
+            # n-step target: r is the discounted n-step sum, g = gamma^k
+            tgt = r + g * (1.0 - done) * q_next
+            td = q_sa - jax.lax.stop_gradient(tgt)
+            # Huber
+            abs_td = jnp.abs(td)
+            quad = jnp.minimum(abs_td, delta)
+            lin = abs_td - quad
+            return jnp.mean(0.5 * quad**2 + delta * lin)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return opt, update
+
+
+def epsilon_by_step(cfg: DQNConfig, env_step):
+    """Linear ``eps_start -> eps_end`` over ``cfg.eps_decay_steps`` env steps.
+
+    Works on Python scalars and jnp arrays alike (the batched trainer calls
+    it inside the scan); invariant to how many rollouts advance in parallel,
+    because the clock is *global* env steps, not episodes.
+    """
+    decay = max(int(cfg.eps_decay_steps or 1), 1)
+    frac = jnp.minimum(jnp.asarray(env_step, jnp.float32) / decay, 1.0)
+    return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
 
 
 # ------------------------------- learner ----------------------------------
@@ -128,41 +194,17 @@ class DQNLearner:
         sizes = (cfg.state_dim, *cfg.hidden, cfg.num_actions)
         self.params = init_mlp(key, sizes)
         self.target = jax.tree_util.tree_map(jnp.copy, self.params)
-        self.opt_state = _adam_init(self.params)
+        self._opt, update = make_td_update(cfg)
+        self.opt_state = self._opt.init(self.params)
         self.updates = 0
         self.buffer = ReplayBuffer(cfg.buffer_capacity, cfg.state_dim)
         self._rng = np.random.default_rng(cfg.seed + 1)
-
-        gamma, delta, lr = cfg.gamma, cfg.huber_delta, cfg.lr
-
-        @jax.jit
-        def update(params, target, opt_state, s, a, r, s2, done, g):
-            def loss_fn(p):
-                q = q_forward(p, s)
-                q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
-                # Double DQN: online net picks the argmax, target net evaluates
-                a2 = jnp.argmax(q_forward(p, s2), axis=1)
-                q_next = jnp.take_along_axis(
-                    q_forward(target, s2), a2[:, None], axis=1
-                )[:, 0]
-                # n-step target: r is the discounted n-step sum, g = gamma^k
-                tgt = r + g * (1.0 - done) * q_next
-                td = q_sa - jax.lax.stop_gradient(tgt)
-                # Huber
-                abs_td = jnp.abs(td)
-                quad = jnp.minimum(abs_td, delta)
-                lin = abs_td - quad
-                return jnp.mean(0.5 * quad**2 + delta * lin)
-
-            loss, grads = jax.value_and_grad(loss_fn)(params)
-            new_params, new_opt = _adam_update(params, grads, opt_state, lr)
-            return new_params, new_opt, loss
 
         @jax.jit
         def q_values(params, s):
             return q_forward(params, s)
 
-        self._update = update
+        self._update = jax.jit(update)
         self._q_values = q_values
 
     # -- acting ----------------------------------------------------------
@@ -198,9 +240,14 @@ class DQNLearner:
         return loss
 
     def epsilon(self, episode: int) -> float:
+        """Host-loop schedule: linear decay over ``eps_decay_episodes``."""
         c = self.cfg
         frac = min(episode / max(c.eps_decay_episodes, 1), 1.0)
         return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def epsilon_at_step(self, env_step: int) -> float:
+        """Vectorized-training schedule: decay in *global* env steps."""
+        return float(epsilon_by_step(self.cfg, env_step))
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> None:

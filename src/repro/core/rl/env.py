@@ -140,6 +140,24 @@ class RewardWeights:
         return (y / (self.a + 1.0)) / self.scale
 
 
+class _CadenceTimer:
+    """Timer-only pseudo-policy: opens decision points on a fixed clock.
+
+    Interactive engines never call ``decide`` — the timer chain exists only
+    to pause :class:`RepartitionEnv` at ``t = k * interval``, the decision
+    cadence of the batched env (docs/BATCHED_SIM.md §5).
+    """
+
+    def __init__(self, interval_min: float) -> None:
+        self.interval = float(interval_min)
+
+    def decide(self, t, sim):  # pragma: no cover - interactive engines skip it
+        return None
+
+    def next_timer(self, t: float) -> float:
+        return (math.floor(t / self.interval + 1e-9) + 1.0) * self.interval
+
+
 class RepartitionEnv:
     """Incremental repartitioning environment (Gym-style, §IV-D).
 
@@ -159,6 +177,13 @@ class RepartitionEnv:
     Actions are config indices ``0..11`` mapping to configurations
     ``1..12`` (the paper's A100 Fig. 1 table); choosing the current
     configuration is a no-op decision.
+
+    ``decision_interval_min`` switches the env from per-event decisions
+    (default, the paper's §IV-D cadence) to the fixed clock the batched
+    env uses: decisions happen only at ``t = 0, I, 2I, ...`` — event
+    decision points in between are auto-held — and an episode ends at the
+    first boundary past the last completion.  This is the oracle side of
+    the batch-of-1 parity property (tests/test_batched_train.py).
     """
 
     def __init__(
@@ -174,6 +199,7 @@ class RepartitionEnv:
         max_decisions: Optional[int] = None,
         m: int = M_JOBS,
         repartition_mode: str = "partial",
+        decision_interval_min: Optional[float] = None,
     ) -> None:
         from repro.core.workload import WorkloadSpec
 
@@ -190,12 +216,18 @@ class RepartitionEnv:
         self.truncate_after_min = truncate_after_min
         self.max_decisions = max_decisions
         self.m = m
+        if decision_interval_min is not None and decision_interval_min <= 0:
+            raise ValueError(
+                f"decision_interval_min={decision_interval_min} must be positive"
+            )
+        self.decision_interval_min = decision_interval_min
         self.sim: "MIGSimulator | None" = None
         self.engine = None
         self._prev_energy = 0.0
         self._prev_tard = 0.0
         self._decisions = 0
         self._terminated = True
+        self._at_t0 = False
 
     # ------------------------------------------------------------------
     def reset(self, seed: int = 0, jobs=None) -> np.ndarray:
@@ -220,9 +252,10 @@ class RepartitionEnv:
             mig_enabled=self.mig_enabled,
             repartition_mode=self.repartition_mode,
         )
+        cadence = self.decision_interval_min
         self.engine = SimulationEngine(
             self.sim,
-            policy=None,
+            policy=None if cadence is None else _CadenceTimer(cadence),
             interactive=True,
             initial_config=self.initial_config,
             jobs=jobs,
@@ -230,7 +263,13 @@ class RepartitionEnv:
         self._prev_energy = 0.0
         self._prev_tard = 0.0
         self._decisions = 0
-        self._terminated = not self.engine.run_to_decision()
+        if cadence is None:
+            self._terminated = not self.engine.run_to_decision()
+        else:
+            # cadence grid starts at t = 0: the first observation/action pair
+            # happens before any event, exactly like the batched env's reset
+            self._at_t0 = True
+            self._terminated = False
         return self._obs()
 
     def step(self, action: int) -> Tuple[np.ndarray, float, bool, bool, Dict[str, Any]]:
@@ -243,10 +282,21 @@ class RepartitionEnv:
         penalty = (
             self.rewards.switch_penalty(len(sim.active)) if switched else 0.0
         )
-        self.engine.provide_decision(config_id if switched else None)
+        if self._at_t0:
+            # cadence mode, first decision: nothing has run yet, so there is
+            # no pending interactive decision — apply the switch directly
+            self._at_t0 = False
+            if switched:
+                self.engine.reconfigure(config_id)
+        else:
+            self.engine.provide_decision(config_id if switched else None)
         self._decisions += 1
 
-        running = self.engine.run_to_decision()
+        running = (
+            self.engine.run_to_decision()
+            if self.decision_interval_min is None
+            else self._run_to_cadence_decision()
+        )
         terminated = not running
         truncated = False
         if running:
@@ -275,6 +325,30 @@ class RepartitionEnv:
             "queue_depth": max(len(sim.active) - len(sim.assignment), 0),
         }
         return self._obs(), reward, terminated, truncated, info
+
+    def _run_to_cadence_decision(self) -> bool:
+        """Advance to the next ``k * interval`` pause; False when drained.
+
+        Event decision points between boundaries are auto-held (the chosen
+        configuration persists — the batched env's held-target semantics).
+        A boundary timer firing after the system has fully drained is the
+        episode's end, not a decision: the batched env terminates a rollout
+        at the first boundary past its last completion, and so does this.
+        """
+        eng = self.engine
+        while eng.run_to_decision():
+            if not eng.awaiting_timer:
+                eng.provide_decision(None)
+                continue
+            if (
+                eng.arrivals_pending == 0
+                and not eng.stream_open
+                and not self.sim.active
+            ):
+                eng.provide_decision(None)
+                continue
+            return True
+        return False
 
     @property
     def done(self) -> bool:

@@ -30,6 +30,7 @@ class TrainStats:
     losses: List[float]
     episodes: int
     wall_seconds: float
+    env_steps: int = 0  # total decisions taken (the bench_rl.py currency)
 
 
 def train_dqn(
@@ -44,8 +45,17 @@ def train_dqn(
     guide_episodes: int = 0,
     scenario: Optional[str] = None,
     scenario_kwargs: Optional[Dict] = None,
+    backend: str = "host",
+    train_config=None,
+    decision_interval_min: Optional[float] = None,
 ) -> tuple:
     """Train the repartitioning DQN; returns (learner, TrainStats).
+
+    ``decision_interval_min`` puts the host env on a fixed decision cadence
+    (decisions at multiples of the interval, configuration held in
+    between) — the same decision distribution the batched backend uses,
+    so host-vs-batched comparisons (scripts/bench_rl.py, the parity tests)
+    run equal semantics.  Default ``None`` keeps the native event cadence.
 
     ``guide``/``guide_episodes``: optional demonstration warm-start — the
     first episodes act with the guide policy while the learner trains on the
@@ -54,7 +64,47 @@ def train_dqn(
     ``scenario`` draws episode workloads from the named registry entry
     (:mod:`repro.core.scenarios`) instead of ``spec`` — training against
     bursty or heavy-tailed days uses the same loop.
+
+    ``backend="batched"`` dispatches to the fused on-device trainer
+    (:func:`repro.core.rl.batched_train.train_dqn_batched`): B rollouts and
+    the learner update advance inside one jitted scan, decisions happen on
+    a fixed cadence, and only EDF-FS is available.  ``train_config`` (a
+    :class:`~repro.core.rl.batched_train.BatchedTrainConfig`) carries the
+    batch-shape knobs; ``guide`` is host-only.
     """
+    if backend == "batched":
+        from repro.core.rl.batched_train import train_dqn_batched
+
+        if guide is not None:
+            raise ValueError("guide warm-start is host-backend only")
+        if scheduler_name != "EDF-FS":
+            raise ValueError(
+                "the batched backend schedules with EDF-FS only; pass "
+                "scheduler_name='EDF-FS' explicitly (host default is EDF-SS)"
+            )
+        from repro.core.rl.batched_train import BatchedTrainConfig
+
+        tcfg = train_config or BatchedTrainConfig()
+        if scenario is not None:
+            merged = dict(tcfg.scenario_kwargs or {})
+            merged.update(scenario_kwargs or {})
+            tcfg = dataclasses.replace(
+                tcfg, scenarios=(scenario,), scenario_kwargs=merged or None
+            )
+        if decision_interval_min is not None:
+            tcfg = dataclasses.replace(
+                tcfg, decision_interval_min=decision_interval_min
+            )
+        return train_dqn_batched(
+            num_episodes=num_episodes,
+            dqn_config=dqn_config,
+            train_config=tcfg,
+            rewards=rewards,
+            seed=seed,
+            verbose=verbose,
+        )
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r} (host | batched)")
     spec = spec or WorkloadSpec()
     cfg = dqn_config or DQNConfig(state_dim=FEATURE_DIM, seed=seed)
     learner = DQNLearner(cfg)
@@ -64,6 +114,7 @@ def train_dqn(
         scenario=scenario,
         scenario_kwargs=scenario_kwargs,
         rewards=rewards,
+        decision_interval_min=decision_interval_min,
     )
     nstep = NStepAccumulator(cfg.n_step, cfg.gamma)
 
@@ -71,6 +122,7 @@ def train_dqn(
     ep_rewards: List[float] = []
     ep_proxy: List[float] = []
     all_losses: List[float] = []
+    env_steps = 0
     for ep in range(num_episodes):
         ep_seed = seed * 100_003 + ep
         epsilon = learner.epsilon(ep)
@@ -97,6 +149,7 @@ def train_dqn(
                 action = learner.act(obs, epsilon)
             next_obs, r, terminated, truncated, _ = env.step(action)
             ep_reward += r
+            env_steps += 1
             nstep.push(learner, obs, action, r, next_obs, terminated or truncated)
             loss = learner.maybe_train(1)
             if loss == loss:  # not NaN (returned before the buffer warms up)
@@ -120,6 +173,7 @@ def train_dqn(
         losses=all_losses,
         episodes=num_episodes,
         wall_seconds=time.time() - t0,
+        env_steps=env_steps,
     )
     return learner, stats
 

@@ -95,8 +95,15 @@ class AdamW:
                 vf.astype(v.dtype),
             )
 
-        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
-        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-        new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
-        new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        # flatten against the params treedef rather than tree_map + is_leaf
+        # tuple-sniffing: param trees that themselves contain tuples (e.g. the
+        # DQN's list of (w, b) layers) would otherwise be mis-split
+        p_flat, treedef = jax.tree_util.tree_flatten(params)
+        g_flat = jax.tree_util.tree_leaves(grads)
+        m_flat = jax.tree_util.tree_leaves(state.m)
+        v_flat = jax.tree_util.tree_leaves(state.v)
+        triples = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+        new_params = treedef.unflatten([t[0] for t in triples])
+        new_m = treedef.unflatten([t[1] for t in triples])
+        new_v = treedef.unflatten([t[2] for t in triples])
         return new_params, OptState(m=new_m, v=new_v, step=step)

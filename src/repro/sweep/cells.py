@@ -92,13 +92,23 @@ def _cell_policy_kwargs(cell: Cell) -> Dict[str, Any]:
 # ----------------------------------------------------------------------
 # policy registry (name -> factory taking the cell's policy_kwargs)
 
-def _dqn_policy(params_path: str, initial_config: int = 2) -> RepartitionPolicy:
+def _dqn_policy(
+    params_path: str,
+    initial_config: int = 2,
+    decision_interval_min: Optional[float] = None,
+) -> RepartitionPolicy:
+    """Greedy DQN policy; ``decision_interval_min`` evaluates on the fixed
+    cadence the batched trainer trains under (repro.core.rl.batched_train)."""
     from repro.core.rl import DQNConfig, DQNLearner, greedy_policy
     from repro.core.rl.env import FEATURE_DIM
 
     learner = DQNLearner(DQNConfig(state_dim=FEATURE_DIM))
     learner.load(params_path)
-    return greedy_policy(learner, initial_config=initial_config)
+    return greedy_policy(
+        learner,
+        initial_config=initial_config,
+        decision_interval_min=decision_interval_min,
+    )
 
 
 def _heuristic_policy() -> RepartitionPolicy:

@@ -173,3 +173,27 @@ def test_error_feedback_reduces_bias():
         jnp.max(jnp.abs(acc_plain - true))
     ) + 1e-5
     assert float(jnp.max(jnp.abs(acc_ef - true))) < 0.2
+
+
+def test_adamw_tuple_pytree_params():
+    """Param trees containing tuples (the DQN's list of (w, b) layers) must
+    update leaf-by-leaf against the params treedef — a tuple-sniffing
+    tree_map would mis-split them into (new_p, new_m, new_v) triples."""
+    opt = AdamW(AdamWConfig(lr=0.01, weight_decay=0.0, grad_clip_norm=None))
+    params = [
+        (jnp.ones((3, 2)), jnp.zeros((2,))),
+        (jnp.ones((2, 4)), jnp.zeros((4,))),
+    ]
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    p2, s2 = opt.update(grads, state, params)
+    # structure preserved exactly
+    assert jax.tree_util.tree_structure(p2) == jax.tree_util.tree_structure(params)
+    assert jax.tree_util.tree_structure(s2.m) == jax.tree_util.tree_structure(params)
+    # every leaf moved against the gradient
+    for before, after in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)
+    ):
+        assert before.shape == after.shape
+        assert bool(jnp.all(after < before))
+    assert int(s2.step) == 1
