@@ -111,6 +111,7 @@ def collect_entry(sweeps_dir: str = DEFAULT_SWEEPS_DIR) -> dict:
     except ImportError:  # pragma: no cover - script usable without install
         SIM_VERSION = "unknown"
     entry = {
+        # lint: waive[DT002] run-date metadata for the trend log, not simulation state
         "date": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
         "git_sha": _git_sha(),
         "sim_version": SIM_VERSION,
@@ -184,7 +185,7 @@ def load_trajectory(path: str) -> list:
     try:
         trajectory = json.loads(text)
     except json.JSONDecodeError as e:
-        raise SystemExit(f"{path} holds invalid JSON ({e}); refusing to clobber")
+        raise SystemExit(f"{path} holds invalid JSON ({e}); refusing to clobber") from e
     if not isinstance(trajectory, list):
         raise SystemExit(f"{path} is not a JSON list")
     return trajectory

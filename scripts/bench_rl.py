@@ -228,6 +228,7 @@ def check_agreement() -> dict:
         for a, b in zip(
             jax.tree_util.tree_leaves(host_params),
             jax.tree_util.tree_leaves(scan_params),
+            strict=True,
         )
     )
     return {

@@ -138,7 +138,7 @@ def restore_checkpoint(
         jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(leaves_with_path)
     )
     out_leaves = []
-    for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
+    for (path, leaf), shd in zip(leaves_with_path, shard_leaves, strict=True):
         key = "/".join(
             str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
             for k in path

@@ -106,6 +106,10 @@ class SimSnapshot:
     and dispatchers consume this instead of groping simulator internals.
     """
 
+    # lint: waive[VG001] schema/version class attrs only; no event-loop semantics changed
+    SCHEMA_VERSION = 1  # bump when the field set below changes (repro.lint SD001/SD002)
+    _schema_digest = "608ee2dd"  # pinned by repro.lint; regenerate via `python -m repro.lint`
+
     t: float
     config_id: int
     num_slices: int
@@ -154,6 +158,9 @@ class SimSnapshot:
 @dataclasses.dataclass(frozen=True)
 class EngineSnapshot:
     """:class:`SimSnapshot` plus the engine-level queue state."""
+
+    SCHEMA_VERSION = 1  # bump when the field set below changes (repro.lint SD001/SD002)
+    _schema_digest = "12097506"
 
     sim: SimSnapshot
     next_event_time: Optional[float]

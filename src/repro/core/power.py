@@ -36,7 +36,7 @@ class PowerModel:
         if len(self.watts_by_busy_slots) != self.total_slots + 1:
             raise ValueError("need total_slots+1 power entries (incl. idle)")
         w = self.watts_by_busy_slots
-        if any(b > a + 1e-9 for a, b in zip(w[1:], w)):
+        if any(b > a + 1e-9 for a, b in zip(w[1:], w, strict=False)):
             raise ValueError("power must be nondecreasing in busy slots")
 
     def power_watts(self, busy_slots: float) -> float:

@@ -118,7 +118,7 @@ def train_dqn(
     )
     nstep = NStepAccumulator(cfg.n_step, cfg.gamma)
 
-    t0 = time.time()
+    t0 = time.time()  # lint: waive[DT002] wall-seconds telemetry only
     ep_rewards: List[float] = []
     ep_proxy: List[float] = []
     all_losses: List[float] = []
@@ -172,7 +172,7 @@ def train_dqn(
         episode_et_proxy=ep_proxy,
         losses=all_losses,
         episodes=num_episodes,
-        wall_seconds=time.time() - t0,
+        wall_seconds=time.time() - t0,  # lint: waive[DT002] wall telemetry only
         env_steps=env_steps,
     )
     return learner, stats

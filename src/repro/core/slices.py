@@ -174,7 +174,7 @@ class Partition:
         """
         return tuple(
             (start, s.slots, s.memory_gb)
-            for start, s in zip(self.starts, self.slices)
+            for start, s in zip(self.starts, self.slices, strict=True)
         )
 
     def occupied_cells(self, index: int) -> range:
@@ -183,7 +183,7 @@ class Partition:
 
     def __str__(self) -> str:  # pragma: no cover - repr sugar
         body = " + ".join(
-            f"{s.name}@{start}" for start, s in zip(self.starts, self.slices)
+            f"{s.name}@{start}" for start, s in zip(self.starts, self.slices, strict=True)
         )
         return f"cfg{self.config_id}[{body}]"
 
@@ -471,7 +471,7 @@ def validate_config_table(
             if n_1g10 > max_1g10_slices:
                 raise AssertionError(f"{ctx} has {n_1g10} 1g.10gb slices")
         occupied: set = set()
-        for i, (start, s) in enumerate(zip(part.starts, part.slices)):
+        for i, (start, s) in enumerate(zip(part.starts, part.slices, strict=True)):
             if start % placement_alignment(s.slots) != 0:
                 raise AssertionError(
                     f"{ctx} slice {i} ({s.name}) starts at {start}, "

@@ -84,7 +84,7 @@ def compressed_psum(
 
     flat_g, tdef = jax.tree_util.tree_flatten(grads)
     flat_e = jax.tree_util.tree_leaves(error)
-    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    out = [one(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
     red = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
     new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
     return red, new_err

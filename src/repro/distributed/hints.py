@@ -36,10 +36,10 @@ def hint(x: jax.Array, *axes) -> jax.Array:
     if mesh is None:
         return x
     names = mesh.axis_names
-    shape = dict(zip(names, mesh.shape.values())) if hasattr(mesh, "shape") else {}
+    shape = dict(zip(names, mesh.shape.values(), strict=True)) if hasattr(mesh, "shape") else {}
 
     spec = []
-    for dim, ax in zip(x.shape, axes):
+    for dim, ax in zip(x.shape, axes, strict=True):
         if ax == "dp":
             cand = tuple(a for a in ("pod", "data") if a in names)
             ax = cand if len(cand) > 1 else (cand[0] if cand else None)

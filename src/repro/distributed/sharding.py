@@ -121,7 +121,7 @@ def param_spec(path: Tuple[Any, ...], leaf: Any) -> P:
 
 def _validated(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
     out = []
-    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec)), strict=False):
         if ax is None:
             out.append(None)
             continue

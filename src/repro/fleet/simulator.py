@@ -177,7 +177,7 @@ class FleetView:
         if rec is None:
             return 0.0
         device_minutes = sum(
-            b / p.total_slots for b, p in zip(rec, self._profiles)
+            b / p.total_slots for b, p in zip(rec, self._profiles, strict=True)
         )
         return min(device_minutes / self._norm_min, 1.0)
 
@@ -345,8 +345,8 @@ class FleetSimulator:
         counts = [0] * len(self.profiles)
         for a in assignments:
             counts[a] += 1
-        for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles)):
-            subset = [job for job, a in zip(jobs, assignments) if a == i]
+        for i, (dev, prof) in enumerate(zip(self.spec.devices, self.profiles, strict=True)):
+            subset = [job for job, a in zip(jobs, assignments, strict=True) if a == i]
             sim = MIGSimulator(
                 make_scheduler(dev.scheduler or self.spec.scheduler),
                 power_model=prof.power,
@@ -387,7 +387,7 @@ def _finish_result(
             prof.power.idle_watts
             * max(fleet_makespan - res.extra.get("makespan_min", 0.0), 0.0)
             / 60.0
-            for prof, res in zip(profiles, per_device)
+            for prof, res in zip(profiles, per_device, strict=True)
         )
         aggregate = dataclasses.replace(
             aggregate,
@@ -425,7 +425,7 @@ class FleetStream:
         self.dispatcher = as_context_dispatcher(make_dispatcher(spec.dispatcher))
         self.profiles = fleet.profiles
         engines: List[SimulationEngine] = []
-        for i, (dev, prof) in enumerate(zip(spec.devices, fleet.profiles)):
+        for i, (dev, prof) in enumerate(zip(spec.devices, fleet.profiles, strict=True)):
             sim = MIGSimulator(
                 make_scheduler(dev.scheduler or spec.scheduler),
                 power_model=prof.power,
@@ -444,7 +444,7 @@ class FleetStream:
         self.engines = engines
         self.states = [
             EngineDeviceState(i, prof, engine)
-            for i, (prof, engine) in enumerate(zip(fleet.profiles, engines))
+            for i, (prof, engine) in enumerate(zip(fleet.profiles, engines, strict=True))
         ]
         self.trace: DispatchTrace = []
         self.view = FleetView(self.trace, fleet.profiles, engines=engines)
@@ -467,7 +467,7 @@ class FleetStream:
         # clock rests at its last event; between events state evolves
         # linearly, so the projection is exact) — the dispatcher
         # compares every device at the same simulated time t⁻
-        for engine, st in zip(self.engines, self.states):
+        for engine, st in zip(self.engines, self.states, strict=True):
             engine.run_until(job.arrival, inclusive=False)
             st.observe_at(job.arrival)
         ctx = DispatchContext(

@@ -1,0 +1,608 @@
+"""R2 — JAX purity rules (JP001-JP004) over a lightweight call graph.
+
+Scope: the modules that assemble jitted programs
+(:data:`repro.lint.paths.R2_PATHS`).  The pass first resolves which
+functions *reach a JAX trace*:
+
+* **roots** — functions decorated with / passed to ``jax.jit``, ``vmap``,
+  ``lax.scan``/``cond``/``while_loop``/``fori_loop``/``switch``,
+  ``pl.pallas_call``, ``jax.grad`` …, including lambdas, ``partial(...)``
+  wrappers, and the repo's factory idiom (``step = make_step_fn(...)`` →
+  the inner def that ``make_step_fn`` returns is traced when ``step`` is
+  passed to a transform);
+* **transitive** — anything a traced function calls by name (resolved
+  through enclosing scopes, module globals, and imports within the R2
+  module set).
+
+Inside traced functions it flags Python side effects (JP001),
+tracer-dependent ``if``/``while`` (JP002), host casts
+``float()/int()/bool()`` of traced values (JP003), and ``np.*`` calls on
+traced arguments (JP004).
+
+Tracedness of a *parameter* is a heuristic (static analysis cannot see
+`static_argnames` reaching every call site), tuned to this repo:
+
+* bodies handed to ``scan``/``vmap``/``cond``/``pallas_call`` have **all**
+  params traced (JAX guarantees it), and attribute access on a param
+  (``state.remaining``) counts as traced — scan carries are NamedTuples;
+* ``jax.jit`` roots drop params named in ``static_argnames`` /
+  positioned in ``static_argnums``;
+* transitively-called helpers treat params as traced but ignore pure
+  attribute access (``cfg.use_bias`` — config objects are closure-static
+  in this codebase) and shape arithmetic (``x.shape``/``.ndim``/``.dtype``).
+
+``is None`` / ``isinstance`` / ``hasattr`` tests are never flagged (static
+under trace).  False positives that survive the heuristics get an inline
+``# lint: waive[JP00x] reason``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.lint.base import Violation
+from repro.lint.determinism import _Imports
+
+__all__ = ["check_purity"]
+
+#: transforms whose first function argument may carry static params
+_JIT_LIKE = {
+    "jax.jit",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.grad",
+    "jax.value_and_grad",
+}
+
+#: dotted transform -> indices of function-valued positional args whose
+#: params are all traced
+_BODY_ARGS = {
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.associative_scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+
+#: lax.switch(index, [branches], *operands): arg 1 is a list of functions
+_SWITCH = "jax.lax.switch"
+
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+_STATIC_TESTS = {"isinstance", "hasattr", "callable", "len", "issubclass"}
+
+
+@dataclasses.dataclass
+class _Func:
+    qualname: str
+    node: ast.AST  # FunctionDef | Lambda
+    params: Tuple[str, ...]
+    #: params whose annotation marks them static (str/bool/int/float
+    #: hyperparams, config objects) — see :func:`_annotation_static`
+    annotated_static: Tuple[str, ...] = ()
+    #: trace kind, set during root/propagation: None | "body" | "jit" | "called"
+    kind: Optional[str] = None
+    static_params: Tuple[str, ...] = ()
+    #: names of inner defs this function returns (factory idiom)
+    returns: Tuple[str, ...] = ()
+
+
+#: annotations that mark a parameter as a static hyperparameter rather
+#: than a traced array: Python scalars/strings and config-object types.
+#: (A traced argument in this codebase is annotated jnp.ndarray/jax.Array/
+#: Any or not at all.)
+_STATIC_ANN = re.compile(
+    r"^(typing\.)?(Optional\[)?(str|bool|int|float)\]?$"
+    r"|^(typing\.)?Literal\["
+    r"|Config\b|Spec\b"
+)
+
+
+def _annotation_static(ann: Optional[ast.expr]) -> bool:
+    if ann is None:
+        return False
+    try:
+        text = ast.unparse(ann).strip("\"'")
+    except Exception:
+        return False
+    return bool(_STATIC_ANN.search(text))
+
+
+def _annotated_static_params(args: ast.arguments) -> Tuple[str, ...]:
+    out = []
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        if _annotation_static(a.annotation):
+            out.append(a.arg)
+    return tuple(out)
+
+
+class _FileIndex(ast.NodeVisitor):
+    """One file's functions, scope tables, and local aliases."""
+
+    def __init__(self, path: str, module: str, tree: ast.AST) -> None:
+        self.path = path
+        self.module = module
+        self.tree = tree
+        self.imports = _Imports()
+        self.funcs: Dict[str, _Func] = {}
+        #: scope qualname ("" = module) -> {local name: func qualname}
+        self.scopes: Dict[str, Dict[str, str]] = {"": {}}
+        #: scope -> {var name: qualname of the factory whose result it holds}
+        self.aliases: Dict[str, Dict[str, str]] = {"": {}}
+        self._stack: List[str] = [""]
+        self.visit(tree)
+
+    # -- scope helpers -------------------------------------------------
+    @property
+    def _scope(self) -> str:
+        return self._stack[-1]
+
+    def _qual(self, name: str) -> str:
+        return f"{self._scope}.{name}".lstrip(".")
+
+    # -- collection ----------------------------------------------------
+    def visit_Import(self, node):  # noqa: D102 - trivial
+        self.imports.feed(node)
+
+    def visit_ImportFrom(self, node):  # noqa: D102 - trivial
+        self.imports.feed(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._push(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def _push(self, name: str) -> None:
+        q = self._qual(name)
+        self._stack.append(q)
+        self.scopes.setdefault(q, {})
+        self.aliases.setdefault(q, {})
+
+    def visit_FunctionDef(self, node) -> None:
+        q = self._qual(node.name)
+        params = _param_names(node.args)
+        self.funcs[q] = _Func(q, node, params, _annotated_static_params(node.args))
+        self.scopes[self._scope][node.name] = q
+        self._push(node.name)
+        self.generic_visit(node)
+        # record `return inner_def` for the factory idiom
+        rets = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Return) and isinstance(sub.value, ast.Name):
+                target = self.lookup(sub.value.id, q)
+                if target:
+                    rets.append(target)
+        self.funcs[q].returns = tuple(rets)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # `step = make_step_fn(...)` — remember which factory built `step`
+        if (
+            len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and isinstance(node.value, ast.Call)
+            and isinstance(node.value.func, ast.Name)
+        ):
+            factory = self.lookup(node.value.func.id, self._scope)
+            if factory:
+                self.aliases[self._scope][node.targets[0].id] = factory
+        self.generic_visit(node)
+
+    # -- resolution ----------------------------------------------------
+    def lookup(self, name: str, scope: str) -> Optional[str]:
+        """Resolve a bare name to a function qualname via the scope chain."""
+        while True:
+            hit = self.scopes.get(scope, {}).get(name)
+            if hit:
+                return hit
+            if not scope:
+                return None
+            scope = scope.rpartition(".")[0]
+
+    def lookup_alias(self, name: str, scope: str) -> Optional[str]:
+        while True:
+            hit = self.aliases.get(scope, {}).get(name)
+            if hit:
+                return hit
+            if not scope:
+                return None
+            scope = scope.rpartition(".")[0]
+
+
+def _param_names(args: ast.arguments) -> Tuple[str, ...]:
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return tuple(names)
+
+
+def _static_argnames(call: ast.Call) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
+    names: List[str] = []
+    nums: List[int] = []
+    for kw in call.keywords:
+        vals: Sequence[ast.expr]
+        if isinstance(kw.value, (ast.Tuple, ast.List)):
+            vals = kw.value.elts
+        else:
+            vals = [kw.value]
+        if kw.arg == "static_argnames":
+            names.extend(
+                v.value for v in vals if isinstance(v, ast.Constant) and isinstance(v.value, str)
+            )
+        elif kw.arg == "static_argnums":
+            nums.extend(
+                v.value for v in vals if isinstance(v, ast.Constant) and isinstance(v.value, int)
+            )
+    return tuple(names), tuple(nums)
+
+
+class _Analyzer:
+    """Whole-module-set analysis: roots, propagation, then body checks."""
+
+    def __init__(self, files: Dict[str, Tuple[str, ast.AST]]) -> None:
+        # files: rel_path -> (module dotted name, tree)
+        self.index: Dict[str, _FileIndex] = {}
+        self.by_module: Dict[str, _FileIndex] = {}
+        for path, (module, tree) in files.items():
+            idx = _FileIndex(path, module, tree)
+            self.index[path] = idx
+            self.by_module[module] = idx
+        self._lambda_seq = 0
+
+    # -- phase 1: roots ------------------------------------------------
+    def find_roots(self) -> None:
+        for idx in self.index.values():
+            for scope, node in _walk_scoped(idx):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{scope}.{node.name}".lstrip(".")
+                    for dec in node.decorator_list:
+                        self._maybe_decorator_root(idx, q, dec)
+                elif isinstance(node, ast.Call):
+                    self._maybe_transform_call(idx, scope, node)
+
+    def _maybe_decorator_root(self, idx: _FileIndex, q: str, dec: ast.expr) -> None:
+        target = dec
+        statics: Tuple[Tuple[str, ...], Tuple[int, ...]] = ((), ())
+        if isinstance(dec, ast.Call):
+            dotted = idx.imports.resolve(dec.func)
+            if dotted == "functools.partial" and dec.args:
+                inner = idx.imports.resolve(dec.args[0])
+                if inner in _JIT_LIKE:
+                    statics = _static_argnames(dec)
+                    self._mark(idx, q, "jit", statics)
+                return
+            target = dec.func
+            statics = _static_argnames(dec)
+        dotted = idx.imports.resolve(target)
+        if dotted in _JIT_LIKE:
+            self._mark(idx, q, "jit", statics)
+
+    def _maybe_transform_call(self, idx: _FileIndex, scope: str, call: ast.Call) -> None:
+        dotted = idx.imports.resolve(call.func)
+        if dotted is None:
+            return
+        # partial(jax.jit, ...)(f) unwrapping is rare enough to skip; the
+        # decorator form above covers the repo's usage.
+        if dotted in _JIT_LIKE:
+            statics = _static_argnames(call)
+            if call.args:
+                self._mark_expr(idx, scope, call.args[0], "jit", statics)
+        elif dotted in _BODY_ARGS:
+            for i in _BODY_ARGS[dotted]:
+                if i < len(call.args):
+                    self._mark_expr(idx, scope, call.args[i], "body", ((), ()))
+        elif dotted == _SWITCH and len(call.args) >= 2:
+            branches = call.args[1]
+            elts = branches.elts if isinstance(branches, (ast.List, ast.Tuple)) else [branches]
+            for e in elts:
+                self._mark_expr(idx, scope, e, "body", ((), ()))
+
+    def _mark_expr(self, idx, scope, expr, kind, statics) -> None:
+        if isinstance(expr, ast.Call):
+            # partial(f, ...) or factory(...) used inline
+            dotted = idx.imports.resolve(expr.func)
+            if dotted == "functools.partial" and expr.args:
+                self._mark_expr(idx, scope, expr.args[0], kind, statics)
+            elif isinstance(expr.func, ast.Name):
+                factory = idx.lookup(expr.func.id, scope)
+                if factory:
+                    for ret in idx.funcs[factory].returns:
+                        self._mark(idx, ret, kind, statics)
+            return
+        if isinstance(expr, ast.Lambda):
+            self._lambda_seq += 1
+            q = f"<lambda#{self._lambda_seq}@{expr.lineno}>"
+            idx.funcs[q] = _Func(q, expr, _param_names(expr.args))
+            self._mark(idx, q, kind, statics)
+            return
+        if isinstance(expr, ast.Name):
+            q = idx.lookup(expr.id, scope)
+            if q:
+                self._mark(idx, q, kind, statics)
+                return
+            factory = idx.lookup_alias(expr.id, scope)
+            if factory:  # step = make_step_fn(...); vmap(step, ...)
+                for ret in idx.funcs[factory].returns:
+                    self._mark(idx, ret, kind, statics)
+                return
+            imported = idx.imports.resolve(expr)
+            if imported:
+                self._mark_imported(imported, kind, statics)
+        elif isinstance(expr, ast.Attribute):
+            imported = idx.imports.resolve(expr)
+            if imported:
+                self._mark_imported(imported, kind, statics)
+
+    def _mark_imported(self, dotted: str, kind, statics) -> None:
+        module, _, name = dotted.rpartition(".")
+        idx = self.by_module.get(module)
+        if idx and name in idx.scopes.get("", {}):
+            self._mark(idx, idx.scopes[""][name], kind, statics)
+
+    def _mark(self, idx: _FileIndex, q: str, kind: str, statics) -> None:
+        fn = idx.funcs.get(q)
+        if fn is None:
+            return
+        # "body" is the strictest kind; never downgrade it
+        if fn.kind == "body":
+            return
+        if fn.kind is None or kind == "body":
+            fn.kind = kind
+            names, nums = statics
+            static = set(names)
+            for i in nums:
+                if i < len(fn.params):
+                    static.add(fn.params[i])
+            fn.static_params = tuple(sorted(static))
+
+    # -- phase 2: propagation -----------------------------------------
+    def propagate(self) -> None:
+        work = [
+            (idx, q)
+            for idx in self.index.values()
+            for q, fn in idx.funcs.items()
+            if fn.kind is not None
+        ]
+        seen: Set[Tuple[str, str]] = {(idx.path, q) for idx, q in work}
+        while work:
+            idx, q = work.pop()
+            fn = idx.funcs[q]
+            if isinstance(fn.node, ast.Lambda):
+                body: List[ast.AST] = [fn.node.body]
+            else:
+                body = fn.node.body
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    tgt = self._resolve_callee(idx, q, sub.func)
+                    if tgt is None:
+                        continue
+                    tidx, tq = tgt
+                    if tidx.funcs[tq].kind is None and (tidx.path, tq) not in seen:
+                        tidx.funcs[tq].kind = "called"
+                        seen.add((tidx.path, tq))
+                        work.append((tidx, tq))
+
+    def _resolve_callee(self, idx, scope, func_expr):
+        if isinstance(func_expr, ast.Name):
+            q = idx.lookup(func_expr.id, scope)
+            if q:
+                return idx, q
+            imported = idx.imports.resolve(func_expr)
+            if imported:
+                module, _, name = imported.rpartition(".")
+                tidx = self.by_module.get(module)
+                if tidx and name in tidx.scopes.get("", {}):
+                    return tidx, tidx.scopes[""][name]
+        elif isinstance(func_expr, ast.Attribute):
+            imported = idx.imports.resolve(func_expr)
+            if imported:
+                module, _, name = imported.rpartition(".")
+                tidx = self.by_module.get(module)
+                if tidx and name in tidx.scopes.get("", {}):
+                    return tidx, tidx.scopes[""][name]
+        return None
+
+    # -- phase 3: checks ----------------------------------------------
+    def check(self) -> List[Violation]:
+        out: List[Violation] = []
+        for idx in self.index.values():
+            for fn in idx.funcs.values():
+                if fn.kind is not None:
+                    out.extend(_check_traced(idx, fn))
+        return out
+
+
+def _walk_scoped(idx: _FileIndex):
+    """Yield (enclosing scope qualname, node) over the whole file."""
+
+    def rec(node: ast.AST, scope: str):
+        for child in ast.iter_child_nodes(node):
+            yield scope, child
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                yield from rec(child, f"{scope}.{child.name}".lstrip("."))
+            else:
+                yield from rec(child, scope)
+
+    yield from rec(idx.tree, "")
+
+
+def _refs_traced(expr: ast.expr, traced: Set[str], *, attr_is_traced: bool) -> bool:
+    """Does this expression reference a traced parameter?
+
+    Attribute chains rooted at a traced param count only when
+    ``attr_is_traced`` (scan carries yes, config objects no); shape/dtype
+    attributes never count.
+    """
+
+    def rec(node: ast.AST, under_attr: bool) -> bool:
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False
+            return rec(node.value, True)
+        if isinstance(node, ast.Name):
+            if node.id not in traced:
+                return False
+            return attr_is_traced if under_attr else True
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in _STATIC_TESTS:
+                return False
+            subs = list(node.args) + [k.value for k in node.keywords]
+            if isinstance(f, ast.Attribute):
+                subs.append(f.value)  # x.sum() on a traced x counts
+            return any(rec(s, under_attr) for s in subs)
+        return any(rec(c, under_attr) for c in ast.iter_child_nodes(node))
+
+    return rec(expr, False)
+
+
+def _is_static_test(test: ast.expr) -> bool:
+    """`x is None` / isinstance-style tests are static under tracing."""
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    ):
+        return True
+    # `"key" in params_dict` — pytree *structure* is static under trace
+    if (
+        isinstance(test, ast.Compare)
+        and all(isinstance(op, (ast.In, ast.NotIn)) for op in test.ops)
+        and isinstance(test.left, ast.Constant)
+    ):
+        return True
+    if isinstance(test, ast.Call) and isinstance(test.func, ast.Name):
+        if test.func.id in _STATIC_TESTS:
+            return True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_static_test(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_is_static_test(v) for v in test.values)
+    return False
+
+
+def _calls_jnp(expr: ast.expr, imports: _Imports) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            dotted = imports.resolve(sub.func)
+            if dotted and (dotted.startswith("jax.") or dotted == "jax"):
+                return True
+    return False
+
+
+def _check_traced(idx: _FileIndex, fn: _Func) -> List[Violation]:
+    out: List[Violation] = []
+    traced = set(fn.params) - set(fn.static_params) - set(fn.annotated_static)
+    attr_traced = fn.kind == "body"
+    path = idx.path
+
+    if isinstance(fn.node, ast.Lambda):
+        stmts: List[ast.AST] = [fn.node.body]
+    else:
+        stmts = list(fn.node.body)
+
+    def walk_no_nested(nodes):
+        # nested defs/lambdas are checked via their own traced entry (if
+        # they are traced at all) — never as part of the parent's body
+        stack = [
+            n for n in nodes
+            if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+        ]
+        while stack:
+            n = stack.pop()
+            yield n
+            for c in ast.iter_child_nodes(n):
+                if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    continue
+                stack.append(c)
+
+    for node in walk_no_nested(stmts):
+        # JP001 — Python side effects
+        if isinstance(node, ast.Global):
+            out.append(
+                Violation(
+                    "JP001", path, node.lineno, node.col_offset,
+                    f"`global` write inside traced function {fn.qualname!r} — "
+                    f"jitted code must be pure (runs once at trace time)",
+                )
+            )
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            if node.func.id in {"print", "open", "input"}:
+                out.append(
+                    Violation(
+                        "JP001", path, node.lineno, node.col_offset,
+                        f"{node.func.id}() inside traced function "
+                        f"{fn.qualname!r} executes at trace time only; use "
+                        f"jax.debug.print / host_callback if intended",
+                    )
+                )
+            # JP003 — host casts of traced values
+            elif node.func.id in {"float", "int", "bool"} and node.args:
+                if _refs_traced(node.args[0], traced, attr_is_traced=attr_traced):
+                    out.append(
+                        Violation(
+                            "JP003", path, node.lineno, node.col_offset,
+                            f"{node.func.id}() of traced value in "
+                            f"{fn.qualname!r} forces a host transfer and "
+                            f"fails under jit; use jnp casts/astype",
+                        )
+                    )
+        # JP004 — numpy on traced arguments
+        if isinstance(node, ast.Call):
+            dotted = idx.imports.resolve(node.func)
+            if dotted and dotted.startswith("numpy."):
+                argrefs = any(
+                    _refs_traced(a, traced, attr_is_traced=attr_traced)
+                    for a in list(node.args) + [k.value for k in node.keywords]
+                )
+                if argrefs:
+                    out.append(
+                        Violation(
+                            "JP004", path, node.lineno, node.col_offset,
+                            f"np.{dotted.split('.', 1)[1]}() on a traced "
+                            f"argument in {fn.qualname!r} falls back to host "
+                            f"numpy; use jnp",
+                        )
+                    )
+        # JP002 — tracer-dependent control flow
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if _is_static_test(test):
+                continue
+            hit = _refs_traced(test, traced, attr_is_traced=attr_traced)
+            jnp_hit = _calls_jnp(test, idx.imports)
+            if hit or jnp_hit:
+                kw = "while" if isinstance(node, ast.While) else "if"
+                why = (
+                    "calls jax in its test" if jnp_hit and not hit
+                    else "branches on a traced parameter"
+                )
+                out.append(
+                    Violation(
+                        "JP002", path, node.lineno, node.col_offset,
+                        f"Python `{kw}` in traced function {fn.qualname!r} "
+                        f"{why}; use lax.cond/lax.while_loop/jnp.where",
+                    )
+                )
+    return out
+
+
+def check_purity(files: Dict[str, Tuple[str, ast.AST]]) -> List[Violation]:
+    """Run JP001-JP004 over the R2 module set.
+
+    ``files`` maps repo-relative path -> (dotted module name, parsed tree).
+    """
+    analyzer = _Analyzer(files)
+    analyzer.find_roots()
+    analyzer.propagate()
+    return analyzer.check()

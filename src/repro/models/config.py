@@ -137,7 +137,7 @@ class ArchConfig:
             return ()
         kinds = self.layer_kinds()
         moes = [self.layer_is_moe(i) for i in range(self.n_layers)]
-        pairs = tuple(zip(kinds, moes))
+        pairs = tuple(zip(kinds, moes, strict=True))
         # find the smallest repeating unit
         for size in range(1, self.n_layers + 1):
             if self.n_layers % size:

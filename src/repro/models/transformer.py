@@ -180,7 +180,7 @@ def apply_unit(
     # sequence all-gathers, so SP needs explicit shard_map collective-matmul
     # overlap (EXPERIMENTS.md §Perf).
     x = hint(x, "dp", None, None)
-    for (kind, is_moe), p in zip(unit, unit_params):
+    for (kind, is_moe), p in zip(unit, unit_params, strict=True):
         if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
             window = cfg.sliding_window if kind == LayerKind.LOCAL_ATTN else None
             if cfg.local_global_ratio is None and cfg.sliding_window is not None:
@@ -237,7 +237,7 @@ def _run_blocks(
     else:
         aux = jnp.zeros((), jnp.float32)
         for r in range(cfg.num_pattern_repeats):
-            unit_slice = jax.tree_util.tree_map(lambda a_: a_[r], stacked)
+            unit_slice = jax.tree_util.tree_map(lambda a_, r=r: a_[r], stacked)
             (x, aux), _ = body((x, aux), unit_slice)
     return x, aux
 
@@ -412,7 +412,7 @@ def decode_step(
     def body(x, slices):
         p_slices, c_slices = slices
         new_states = []
-        for (kind, is_moe), p, st in zip(unit, p_slices, c_slices):
+        for (kind, is_moe), p, st in zip(unit, p_slices, c_slices, strict=True):
             if kind in (LayerKind.ATTN, LayerKind.LOCAL_ATTN):
                 window = None
                 if kind == LayerKind.LOCAL_ATTN and cfg.sliding_window is not None:
@@ -456,7 +456,7 @@ def decode_step(
     else:
         outs = []
         for r in range(cfg.num_pattern_repeats):
-            sl = jax.tree_util.tree_map(lambda a: a[r], (stacked_params, stacked_cache))
+            sl = jax.tree_util.tree_map(lambda a, r=r: a[r], (stacked_params, stacked_cache))
             x, ns = body(x, sl)
             outs.append(ns)
         new_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

@@ -102,7 +102,7 @@ class AdamW:
         g_flat = jax.tree_util.tree_leaves(grads)
         m_flat = jax.tree_util.tree_leaves(state.m)
         v_flat = jax.tree_util.tree_leaves(state.v)
-        triples = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+        triples = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat, strict=True)]
         new_params = treedef.unflatten([t[0] for t in triples])
         new_m = treedef.unflatten([t[1] for t in triples])
         new_v = treedef.unflatten([t[2] for t in triples])

@@ -179,6 +179,9 @@ class ServiceStats:
     literally the same).
     """
 
+    SCHEMA_VERSION = 1  # bump when the field set below changes (repro.lint SD001/SD002)
+    _schema_digest = "2623a1e3"
+
     num_completed: int = 0
     num_cancelled: int = 0
     total_tardiness: float = 0.0

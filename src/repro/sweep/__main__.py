@@ -61,7 +61,7 @@ def _values_close(a: Any, b: Any, rtol: float) -> bool:
         )
     if isinstance(a, list) and isinstance(b, list):
         return len(a) == len(b) and all(
-            _values_close(x, y, rtol) for x, y in zip(a, b)
+            _values_close(x, y, rtol) for x, y in zip(a, b, strict=True)
         )
     return a == b
 
@@ -167,7 +167,7 @@ def main(argv: List[str] | None = None) -> int:
 
     failed = 0
     for name in names:
-        t0 = time.time()
+        t0 = time.time()  # lint: waive[DT002] progress-log timing only
         try:
             rows, outcome = run_grid(
                 name,
@@ -185,7 +185,7 @@ def main(argv: List[str] | None = None) -> int:
         print(
             f"# {name}: {outcome.total} cells "
             f"({outcome.cached_count} cached, {outcome.computed_count} computed) "
-            f"in {time.time() - t0:.1f}s -> {outcome.jsonl_path}",
+            f"in {time.time() - t0:.1f}s -> {outcome.jsonl_path}",  # lint: waive[DT002] progress log
             file=sys.stderr,
         )
         if args.check_baseline:

@@ -109,6 +109,7 @@ def run_batched_cells(cells: Sequence[Cell]) -> List[Dict[str, Any]]:
     tables = build_tables()
     results: List[Dict[str, Any]] = [{} for _ in cells]
     for idx in groups.values():
+        # lint: waive[DT002] elapsed_s telemetry; stripped before baseline compare
         t0 = time.perf_counter()
         head = cells[idx[0]]
         job_lists = [cell_jobs(cells[i]) for i in idx]
@@ -125,8 +126,8 @@ def run_batched_cells(cells: Sequence[Cell]) -> List[Dict[str, Any]]:
             repartition_mode=cell_repartition_mode(head),
             dt_min=_resolve_dt(head),
         )
-        elapsed = (time.perf_counter() - t0) / len(idx)
-        for i, out in zip(idx, res.to_result_dicts()):
+        elapsed = (time.perf_counter() - t0) / len(idx)  # lint: waive[DT002] telemetry only
+        for i, out in zip(idx, res.to_result_dicts(), strict=True):
             out["elapsed_s"] = elapsed
             results[i] = out
     return results

@@ -196,7 +196,7 @@ def _fig6_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
     for n in ALGOS:
         hist: Dict[int, float] = {}
         total = 0.0
-        for cell, result in zip(cells, results):
+        for cell, result in zip(cells, results, strict=True):
             if cell["group"] != n:
                 continue
             for k, v in result["util_histogram"].items():
@@ -372,8 +372,8 @@ def _fig11_aggregate(cells: List[Cell], results: List[Dict[str, Any]]) -> Rows:
     occupancy: Dict[int, Dict[int, float]] = {b: {} for b in range(6)}
     for result in results:
         trace = [(t, int(c)) for t, c in result["config_trace"]]
-        trace = trace + [(24 * 60.0, trace[-1][1])]
-        for (t0, c), (t1, _) in zip(trace, trace[1:]):
+        trace = [*trace, (24 * 60.0, trace[-1][1])]
+        for (t0, c), (t1, _) in zip(trace, trace[1:], strict=False):
             t0c, t1c = min(t0, 1440.0), min(t1, 1440.0)
             while t0c < t1c:
                 b = int(t0c // 240) % 6

@@ -93,7 +93,7 @@ def run_cells(
         # failure mode a content-addressed cache cannot flag per-cell
         cache_obj.check_version()
 
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # lint: waive[DT002] meta.json wall_s telemetry only
     cells = list(cells)
     hashes = [cell_hash(c) for c in cells]
     results: List[Optional[Dict[str, Any]]] = [None] * len(cells)
@@ -128,7 +128,7 @@ def run_cells(
 
         if progress:
             progress(f"[{name}] {len(batched)} batched cells run in-process")
-        for i, raw in zip(batched, run_batched_cells([cells[i] for i in batched])):
+        for i, raw in zip(batched, run_batched_cells([cells[i] for i in batched]), strict=True):
             out = _strip_volatile(raw)
             results[i] = out
             if cache_obj is not None:
@@ -175,11 +175,11 @@ def run_cells(
         jsonl_path = os.path.join(artifacts_dir, f"{name}.jsonl")
         tmp = jsonl_path + ".tmp"
         with open(tmp, "w") as f:
-            for h, cell, result in zip(hashes, cells, results):
+            for h, cell, result in zip(hashes, cells, results, strict=True):
                 f.write(canonical_json({"hash": h, "cell": cell, "result": result}))
                 f.write("\n")
         os.replace(tmp, jsonl_path)
-        wall_s = time.perf_counter() - t0
+        wall_s = time.perf_counter() - t0  # lint: waive[DT002] meta.json telemetry only
         with open(os.path.join(artifacts_dir, f"{name}.meta.json"), "w") as f:
             json.dump(
                 {
@@ -194,7 +194,7 @@ def run_cells(
                 indent=2,
             )
     else:
-        wall_s = time.perf_counter() - t0
+        wall_s = time.perf_counter() - t0  # lint: waive[DT002] meta.json telemetry only
 
     return SweepOutcome(
         name=name,

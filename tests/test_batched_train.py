@@ -177,7 +177,7 @@ def test_jitted_training_step_matches_learner():
     )
     for a, b in zip(
         jax.tree_util.tree_leaves(host_params),
-        jax.tree_util.tree_leaves(scan_params),
+        jax.tree_util.tree_leaves(scan_params), strict=True,
     ):
         assert float(jnp.max(jnp.abs(a - b))) <= 1e-5
     assert abs(float(host_loss) - float(scan_loss)) <= 1e-5

@@ -138,12 +138,12 @@ def test_main_appends_and_gates(tmp_path, monkeypatch, capsys):
         bench_nightly, "collect_entry",
         lambda sweeps_dir: {**_entry("2026-08-02", eps=100.0)},
     )
-    assert bench_nightly.main(args + ["--gate-events-ratio", "0.5"]) == 1
+    assert bench_nightly.main([*args, "--gate-events-ratio", "0.5"]) == 1
     assert len(json.load(open(out))) == 3
     assert "REGRESSION" in capsys.readouterr().err
     # --dry-run still evaluates the gate (read-only): fails without append
     assert bench_nightly.main(
-        args + ["--gate-events-ratio", "0.5", "--dry-run"]
+        [*args, "--gate-events-ratio", "0.5", "--dry-run"]
     ) == 1
     assert len(json.load(open(out))) == 3  # nothing appended
 

@@ -56,7 +56,7 @@ def test_elasticity_classes_emerge_from_roofline():
 def test_service_minutes_monotone_in_slots():
     for arch, shape in [("gemma3-12b", "train_4k"), ("mixtral-8x7b", "decode_32k")]:
         ts = [service_minutes(arch, shape, k) for k in range(1, 8)]
-        assert all(b <= a + 1e-9 for a, b in zip(ts, ts[1:]))
+        assert all(b <= a + 1e-9 for a, b in zip(ts, ts[1:], strict=False))
 
 
 def test_cluster_jobs_generation():

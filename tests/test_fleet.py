@@ -111,7 +111,7 @@ def test_energy_greedy_spills_under_overload():
 
 def test_dispatch_requires_sorted_arrivals():
     jobs = generate_jobs(SHORT, 6)[:4]
-    jobs = [jobs[1], jobs[0]] + jobs[2:]
+    jobs = [jobs[1], jobs[0], *jobs[2:]]
     with pytest.raises(ValueError, match="sorted"):
         dispatch_jobs(jobs, [device_profile("a100-250w")], make_dispatcher("round-robin"))
 
@@ -195,12 +195,12 @@ def test_state_aware_avoids_repartitioning_device():
 
     profiles = [device_profile("a100-250w")] * 2
     engines = []
-    for k in range(2):
+    for _ in range(2):
         sim = MIGSimulator(make_scheduler("EDF-SS"))
         engines.append(SimulationEngine(sim, policy=StaticPolicy(3), stream_open=True))
     # device 0: force an in-flight repartition right now
     engines[0].sim._start_repartition(6)
-    states = [EngineDeviceState(i, p, e) for i, (p, e) in enumerate(zip(profiles, engines))]
+    states = [EngineDeviceState(i, p, e) for i, (p, e) in enumerate(zip(profiles, engines, strict=True))]
     job = Job(99, JobKind.INFERENCE, 0.0, 1.0, 10.0, LINEAR)
     ctx = DispatchContext(t=0.0, job=job, devices=states)
     pick = StateAwareDispatcher().pick(ctx)

@@ -116,7 +116,7 @@ def test_policy_respects_dwell_and_amortizes_penalty():
     policy = ForecastPolicy()
     sim, res = _run_day(7, policy)
     switch_times = [t for t, _ in sim.config_trace[1:]]
-    for a, b in zip(switch_times, switch_times[1:]):
+    for a, b in zip(switch_times, switch_times[1:], strict=False):
         assert b - a >= policy.min_dwell_min - 1e-6
     assert res.repartitions == len(switch_times)
     stall = res.repartitions * REPARTITION_PENALTY_MIN

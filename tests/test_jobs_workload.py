@@ -76,7 +76,7 @@ def test_workload_determinism_and_validity(seed):
     a = generate_jobs(spec, seed=seed)
     b = generate_jobs(spec, seed=seed)
     assert len(a) == len(b)
-    for ja, jb in zip(a, b):
+    for ja, jb in zip(a, b, strict=True):
         assert ja.arrival == jb.arrival and ja.work == jb.work
         assert ja.deadline > ja.arrival
         assert ja.work > 0

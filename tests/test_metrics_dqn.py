@@ -69,7 +69,7 @@ def test_dqn_learns_trivial_contextual_bandit():
                     gamma=0.0, seed=0)
     learner = DQNLearner(cfg)
     rng = np.random.default_rng(0)
-    for step in range(1500):
+    for _ in range(1500):
         s = rng.random(4).astype(np.float32)
         a = int(rng.integers(0, 4))
         r = 1.0 if a == int(np.argmax(s)) else 0.0
@@ -293,11 +293,11 @@ def test_dqn_optimizer_matches_handrolled_adam():
             lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads
         )
         ref = jax.tree_util.tree_map(
-            lambda p, mm, vv: p
+            lambda p, mm, vv, t=t: p
             - lr * (mm / (1 - b1**t)) / (jnp.sqrt(vv / (1 - b2**t)) + eps),
             ref, m, v,
         )
     for a, b in zip(
-        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(ref)
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(ref), strict=True
     ):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

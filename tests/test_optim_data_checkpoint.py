@@ -192,7 +192,7 @@ def test_adamw_tuple_pytree_params():
     assert jax.tree_util.tree_structure(s2.m) == jax.tree_util.tree_structure(params)
     # every leaf moved against the gradient
     for before, after in zip(
-        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2), strict=True
     ):
         assert before.shape == after.shape
         assert bool(jnp.all(after < before))

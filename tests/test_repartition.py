@@ -111,7 +111,7 @@ def test_validate_config_table_rejects_bad_placements():
 
 
 def test_transition_identity_and_full_turnover():
-    for cid, part in MIG_CONFIGS.items():
+    for part in MIG_CONFIGS.values():
         plan = transition(part, part)
         assert not plan.destroyed and not plan.created
         assert plan.stalled_slots == 0

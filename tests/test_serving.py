@@ -272,7 +272,7 @@ def test_serving_cell_threads_tenants_through_result_dict():
     assert set(res.tenants) <= {t.name for t in SERVING_MIXES["balanced"]}
     assert 0.0 <= res.slo_attainment <= 1.0
     assert out["slo_attainment"] == pytest.approx(res.slo_attainment)
-    for name, st in res.tenants.items():
+    for st in res.tenants.values():
         assert isinstance(st, TenantSLOStats)
         assert 0 <= st.attained <= st.jobs
 

@@ -12,7 +12,7 @@ def test_twelve_configs():
 
 
 def test_fig1_slot_and_memory_budgets():
-    for cid, part in MIG_CONFIGS.items():
+    for part in MIG_CONFIGS.values():
         assert part.total_slots <= TOTAL_SLOTS
         assert part.total_memory_gb <= 40
         assert all(s.slots in (1, 2, 3, 4, 7) for s in part.slices)
@@ -35,7 +35,7 @@ def test_config5_has_hole():
 
 def test_power_monotone_and_saturating():
     w = A100_250W.watts_by_busy_slots
-    assert all(b >= a for a, b in zip(w, w[1:]))
+    assert all(b >= a for a, b in zip(w, w[1:], strict=False))
     # steep early, flat late (Fig. 3): marginal power of slot 1 >> slot 7
     assert (w[1] - w[0]) > 10 * (w[7] - w[6])
     # after 4/7 busy, near-peak (paper: "negligible increase")
